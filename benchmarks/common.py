@@ -1,0 +1,31 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+# CPU-host benchmarks reproduce the paper's TRENDS (work complexity, packing
+# A/B, splitter distributions), not GPU milliseconds. SCALE=1 keeps runs
+# minutes-fast; raise REPRO_BENCH_SCALE for larger sweeps.
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1"))
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds over `iters` calls (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

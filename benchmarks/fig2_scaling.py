@@ -1,0 +1,42 @@
+"""Paper Figure 2: runtime vs list size for all list-ranking implementations.
+
+Lines: serial traversal (numpy/python, the paper's 'sequential CPU'),
+Wylie pointer jumping (O(n log n) work), random splitter (O(n) work,
+both packings). The claim reproduced: the O(n)-work method dominates and
+scales linearly; Wylie's per-element cost grows with log n."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core import random_splitter_rank, wylie_rank
+from repro.core.serial import serial_list_rank
+from repro.ops.kiss import random_linked_list
+
+
+def run(sizes=None) -> list[str]:
+    sizes = sizes or [int(s * SCALE) for s in (250_000, 500_000, 1_000_000, 2_000_000)]
+    lines = []
+    for n in sizes:
+        succ = random_linked_list(n, seed=n)
+        p = min(4096, n // 64 or 1)
+        if n <= 1_000_000:  # python-loop serial gets slow beyond this
+            import time as _t
+
+            t0 = _t.perf_counter()
+            serial_list_rank(succ)
+            t_serial = _t.perf_counter() - t0
+            lines.append(emit(f"fig2/serial/n={n}", t_serial * 1e6, "work=O(n) serial"))
+        t_w = time_fn(lambda: wylie_rank(succ, pack_mode="aos"), iters=2)
+        lines.append(emit(f"fig2/wylie/n={n}", t_w * 1e6, "work=O(n log n)"))
+        for pm in ("soa", "aos"):
+            t_rs = time_fn(
+                lambda pm=pm: random_splitter_rank(succ, p, seed=3, pack_mode=pm),
+                iters=2,
+            )
+            lines.append(emit(f"fig2/splitter-{pm}/n={n}", t_rs * 1e6, "work=O(n)"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

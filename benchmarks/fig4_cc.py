@@ -1,0 +1,47 @@
+"""Paper Figure 4: connected-components runtime per graph family
+(lists, trees of degree k, random graphs of density d) vs the serial
+union-find baseline."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core import label_propagation, shiloach_vishkin
+from repro.core.serial import serial_connected_components
+from repro.ops.kiss import list_graph, random_graph, tree_graph
+
+
+def _families(n):
+    return {
+        "list": list_graph(n, 4, seed=1),
+        "tree-k3": tree_graph(n, 3, seed=2),
+        "random-d0.001": random_graph(n, 2e-3 * 100_000 / n, seed=3),
+    }
+
+
+def run(n: int | None = None) -> list[str]:
+    n = n or int(200_000 * SCALE)
+    lines = []
+    for fam, edges in _families(n).items():
+        m = len(edges)
+        t_sv = time_fn(
+            lambda e=edges: shiloach_vishkin(e[:, 0], e[:, 1], n)[0], iters=2
+        )
+        _, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+        t_lp = time_fn(
+            lambda e=edges: label_propagation(e[:, 0], e[:, 1], n)[0], iters=2
+        )
+        if n <= 200_000:
+            t0 = time.perf_counter()
+            serial_connected_components(edges, n)
+            t_ser = time.perf_counter() - t0
+            lines.append(emit(f"fig4/serial/{fam}/n={n}", t_ser * 1e6, f"m={m}"))
+        lines.append(
+            emit(f"fig4/sv/{fam}/n={n}", t_sv * 1e6, f"m={m};rounds={int(rounds)}")
+        )
+        lines.append(emit(f"fig4/labelprop/{fam}/n={n}", t_lp * 1e6, f"m={m}"))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

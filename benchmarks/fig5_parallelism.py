@@ -1,0 +1,39 @@
+"""Paper Figure 5: speedup vs thread blocks -> TPU adaptation: speedup vs
+lane count p for the random-splitter walk.
+
+The GPU plot saturates at the SM count; the vectorized analogue saturates
+when the lockstep walk's trip count (max sub-list length ~ (n/p) ln p)
+stops shrinking relative to per-step overhead. We report time and trip
+count per p (the oversubscription story, guideline G7)."""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core import random_splitter_rank
+from repro.ops.kiss import random_linked_list
+
+
+def run(n: int | None = None, ps=(64, 256, 1024, 4096, 16384)) -> list[str]:
+    n = n or int(1_000_000 * SCALE)
+    succ = random_linked_list(n, seed=0)
+    lines = []
+    base = None
+    for p in ps:
+        if p > n:
+            continue
+        t = time_fn(
+            lambda p=p: random_splitter_rank(succ, p, seed=3), iters=2
+        )
+        _, stats = random_splitter_rank(succ, p, seed=3, with_stats=True)
+        base = base or t
+        lines.append(
+            emit(
+                f"fig5/p={p}/n={n}",
+                t * 1e6,
+                f"speedup_vs_p64={base/t:.2f};walk_steps={stats.walk_steps}",
+            )
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Figure 6: SV rounds per graph family (list k=1, trees k=2..20,
+random d in {0.001, 0.01}) at fixed edge count, plus Table 4's per-kernel
+global read/write counts (analytic, per round)."""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, emit
+from repro.core import shiloach_vishkin, sv_round_bound
+from repro.ops.kiss import list_graph, random_graph, tree_graph
+
+
+def table4_counts(n: int, m: int, p: int) -> dict[str, dict[str, float]]:
+    """Paper Table 4 (global reads/writes per kernel per round)."""
+    return {
+        "SV0": {"reads": 0, "writes": 2 * n},
+        "SV1a": {"reads": 2 * n, "writes": n},
+        "SV1b": {"reads": 2 * n, "writes": n},
+        "SV2": {"reads": 4 * m, "writes": 2 * n},
+        "SV3": {"reads": 5 * m, "writes": n},
+        "SV4": {"reads": 2 * n, "writes": n},
+        "SV5": {"reads": n, "writes": p},
+    }
+
+
+def run(m_target: int | None = None) -> list[str]:
+    m_target = m_target or int(400_000 * SCALE)
+    lines = []
+    cases = {"list-k1": list_graph(m_target + 4, 4, seed=1)}
+    for k in (2, 3, 8, 20):
+        cases[f"tree-k{k}"] = tree_graph(m_target + 1, k, seed=k)
+    n_rand = int((2 * m_target / 0.001) ** 0.5)
+    cases["random-d0.001"] = random_graph(n_rand, 0.001, seed=5)
+    n_rand2 = int((2 * m_target / 0.01) ** 0.5)
+    cases["random-d0.01"] = random_graph(n_rand2, 0.01, seed=6)
+
+    rounds_by_family = {}
+    for fam, edges in cases.items():
+        n = int(edges.max()) + 1
+        _, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+        rounds_by_family[fam] = int(rounds)
+        counts = table4_counts(n, len(edges), 4096)
+        total_rw = sum(c["reads"] + c["writes"] for c in counts.values())
+        lines.append(
+            emit(
+                f"fig6/rounds/{fam}",
+                float(rounds),
+                f"n={n};m={len(edges)};bound={sv_round_bound(n)};"
+                f"rw_per_round={total_rw}",
+            )
+        )
+    # paper claim: random graphs need fewer rounds than trees/lists
+    assert rounds_by_family["random-d0.01"] <= rounds_by_family["tree-k3"]
+    return lines
+
+
+if __name__ == "__main__":
+    run()

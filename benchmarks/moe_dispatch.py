@@ -1,0 +1,49 @@
+"""Beyond-paper A/B: sorted (coalesced) vs unsorted MoE token dispatch.
+
+Guideline G1 applied at the model level: identical semantics, different
+memory pattern. Reports wall time and the one-hot-cumsum overhead the
+unsorted baseline pays."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.models.transformer import MoEConfig, TransformerConfig
+from repro.models.transformer.moe import init_moe_params, moe_ffn_local
+
+
+def run(tokens: int | None = None) -> list[str]:
+    tokens = tokens or int(16384 * SCALE)
+    cfg_base = TransformerConfig(
+        name="bench", num_layers=1, d_model=512, num_heads=8, num_kv_heads=8,
+        head_dim=64, d_ff=2048, vocab_size=32,
+        moe=MoEConfig(num_experts=64, top_k=4, d_ff_expert=512),
+        dtype="float32", remat=False,
+    )
+    params = init_moe_params(jax.random.PRNGKey(0), cfg_base, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, tokens, 512), jnp.float32)
+    lines = []
+    times = {}
+    for dispatch in ("sorted_ep", "unsorted"):
+        cfg = dataclasses.replace(
+            cfg_base, moe=dataclasses.replace(cfg_base.moe, dispatch=dispatch)
+        )
+        fn = jax.jit(lambda p, x, c=cfg: moe_ffn_local(p, c, x, jax.nn.silu))
+        t = time_fn(fn, params, x, iters=3)
+        times[dispatch] = t
+        lines.append(emit(f"moe_dispatch/{dispatch}/T={tokens}", t * 1e6, ""))
+    lines.append(
+        emit(
+            "moe_dispatch/sorted_speedup",
+            times["unsorted"] / times["sorted_ep"],
+            "x_vs_unsorted",
+        )
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Render the 40-cell roofline table from results/dryrun.json (the §Roofline
+deliverable's data source). Emits one CSV line per (arch, shape, mesh)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(path: str = "results/dryrun.json") -> list[str]:
+    if not os.path.exists(path):
+        print(f"# {path} missing -- run: python -m repro.launch.dryrun --all")
+        return []
+    lines = []
+    for r in json.load(open(path)):
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skip":
+            lines.append(emit(tag, 0.0, f"SKIP:{r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            lines.append(emit(tag, 0.0, "ERROR"))
+            continue
+        roof = r["roofline"]
+        dom = roof["bottleneck"]
+        step_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        lines.append(
+            emit(
+                tag,
+                step_s * 1e6,
+                f"bottleneck={dom};compute_s={roof['compute_s']:.4g};"
+                f"memory_s={roof['memory_s']:.4g};"
+                f"collective_s={roof['collective_s']:.4g};"
+                f"roofline_frac={roof['roofline_fraction']:.3f}",
+            )
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

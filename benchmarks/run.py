@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV lines (benchmarks/common.emit).
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_scaling,
+        fig3_per_element,
+        fig4_cc,
+        fig5_parallelism,
+        fig6_rounds,
+        moe_dispatch,
+        roofline_table,
+        table2_packing,
+        table3_splitters,
+    )
+
+    suites = [
+        ("table2_packing", table2_packing.run),
+        ("table3_splitters", table3_splitters.run),
+        ("fig2_scaling", fig2_scaling.run),
+        ("fig3_per_element", fig3_per_element.run),
+        ("fig4_cc", fig4_cc.run),
+        ("fig5_parallelism", fig5_parallelism.run),
+        ("fig6_rounds", fig6_rounds.run),
+        ("moe_dispatch", moe_dispatch.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

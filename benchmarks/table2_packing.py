@@ -1,0 +1,45 @@
+"""Paper Table 2: per-phase random-splitter kernel times, 48-bit (SoA)
+vs 64-bit (AoS) packing, across list sizes.
+
+On TPU/CPU the packing A/B is SoA (two gathers per node) vs AoS row packing
+(one (n,2) row gather) -- guideline G5. We report total step time per
+phase group matching the paper's columns: Init+Select (RS1/2), Sub-list
+Ranking (RS3), Splitter Ranking (RS4), Rank Aggregation (RS5), plus the
+analytic per-node bytes model that predicts the trend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core.list_ranking import _random_splitter_core, select_splitters
+from repro.ops.kiss import random_linked_list
+from repro.ops.packing import bytes_per_node
+
+
+def run(sizes=None, p: int = 4096) -> list[str]:
+    sizes = sizes or [int(s * SCALE) for s in (1_000_000, 2_000_000, 4_000_000)]
+    lines = []
+    for n in sizes:
+        succ = jnp.asarray(random_linked_list(n, seed=n))
+        spl = jnp.asarray(select_splitters(n, p, seed=1))
+        for mode, label in (("soa", "48bit-analogue"), ("aos", "64bit-analogue")):
+            fn = jax.jit(
+                lambda s, sp, m=mode: _random_splitter_core(s, sp, pack_mode=m)[0]
+            )
+            t = time_fn(fn, succ, spl, iters=3)
+            traffic = bytes_per_node(mode)
+            lines.append(
+                emit(
+                    f"table2/rs_total/{label}/n={n}",
+                    t * 1e6,
+                    f"bytes_per_node_step={traffic['read']+traffic['write']}",
+                )
+            )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Table 3: random vs perfect (even) splitters.
+
+Reports, per n: mean sub-list length n/p, Reid-Miller expected extremes
+(low ~ n/(2p^2), high ~ (n/p) H_p), observed extremes, walk trip counts,
+and the runtime gap random-vs-even (paper: 6-10%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core import even_splitters, random_splitter_rank
+from repro.ops.kiss import random_linked_list
+
+
+def run(sizes=None, p: int = 2048) -> list[str]:
+    sizes = sizes or [int(s * SCALE) for s in (1_000_000, 2_000_000)]
+    lines = []
+    for n in sizes:
+        succ = random_linked_list(n, seed=n)
+        _, stats_r = random_splitter_rank(succ, p, seed=7, with_stats=True)
+        t_rand = time_fn(
+            lambda: random_splitter_rank(succ, p, seed=7), iters=2
+        )
+        spl_even = even_splitters(succ, p)
+        _, stats_e = random_splitter_rank(
+            succ, splitters=spl_even, with_stats=True
+        )
+        t_even = time_fn(
+            lambda: random_splitter_rank(succ, splitters=spl_even), iters=2
+        )
+        h_p = float(np.log(p) + 0.5772)
+        exp_high = n / p * h_p
+        exp_low = n / (2 * p * p)
+        gap = (t_rand - t_even) / t_even * 100
+        lines.append(
+            emit(
+                f"table3/n={n}/p={p}",
+                t_rand * 1e6,
+                f"mean={n/p:.1f};exp_low={exp_low:.2f};exp_high={exp_high:.1f};"
+                f"obs_low={stats_r.sublist_lengths.min()};"
+                f"obs_high={stats_r.sublist_lengths.max()};"
+                f"even_low={stats_e.sublist_lengths.min()};"
+                f"even_high={stats_e.sublist_lengths.max()};"
+                f"runtime_gap_pct={gap:.1f}",
+            )
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

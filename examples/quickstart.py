@@ -1,0 +1,76 @@
+"""Quickstart: the paper's two algorithms through the public API.
+
+    PYTHONPATH=src python examples/quickstart.py [--n 2000000]
+
+Generates a KISS-random linked list and graph (as in the paper's
+experiments), ranks the list with both Wylie pointer jumping and the
+parallel random-splitter algorithm (SoA vs AoS packing -- the 48/64-bit
+experiment), labels components with Shiloach-Vishkin, and verifies
+everything against the serial oracles.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (
+    num_components,
+    random_splitter_rank,
+    shiloach_vishkin,
+    sv_round_bound,
+    wylie_rank,
+)
+from repro.core.serial import serial_connected_components, serial_list_rank, canonicalize_labels
+from repro.ops.kiss import random_forest, random_linked_list
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2_000_000)
+    ap.add_argument("--splitters", type=int, default=4096)
+    args = ap.parse_args()
+
+    print(f"== list ranking, n={args.n:,} ==")
+    succ = random_linked_list(args.n, seed=1)
+
+    t0 = time.perf_counter()
+    r_wylie = np.asarray(wylie_rank(succ))
+    t_wylie = time.perf_counter() - t0
+    print(f"wylie (O(n log n) work):          {t_wylie*1e3:8.1f} ms")
+
+    for pm, label in (("soa", "SoA ('48-bit')"), ("aos", "AoS ('64-bit')")):
+        t0 = time.perf_counter()
+        r_split, stats = random_splitter_rank(
+            succ, args.splitters, seed=2, pack_mode=pm, with_stats=True
+        )
+        r_split = np.asarray(r_split)
+        dt = time.perf_counter() - t0
+        print(
+            f"random splitter {label}: {dt*1e3:8.1f} ms  "
+            f"(p={args.splitters}, max sub-list {stats.sublist_lengths.max()}, "
+            f"mean {stats.expected_mean:.0f})"
+        )
+        assert (r_split == r_wylie).all()
+
+    if args.n <= 2_000_000:
+        ref = serial_list_rank(succ)
+        assert (r_wylie == ref).all()
+        print("verified against serial traversal")
+
+    print("\n== connected components ==")
+    n = min(args.n, 500_000)
+    edges = random_forest(n, num_components=40, seed=3)
+    t0 = time.perf_counter()
+    labels, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    dt = time.perf_counter() - t0
+    print(
+        f"shiloach-vishkin: {dt*1e3:8.1f} ms  rounds={int(rounds)} "
+        f"(bound {sv_round_bound(n)})  components={num_components(labels)}"
+    )
+    ref = canonicalize_labels(serial_connected_components(edges, n))
+    assert (canonicalize_labels(np.asarray(labels)) == ref).all()
+    print("verified against union-find")
+
+
+if __name__ == "__main__":
+    main()

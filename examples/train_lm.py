@@ -1,0 +1,91 @@
+"""End-to-end LM training driver: ~100M-param decoder, synthetic KISS data,
+checkpoint/auto-resume, straggler watchdog, optional grad compression.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 50
+
+Kill it mid-run and re-launch: it resumes from the last checkpoint.
+"""
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.lm import lm_batch
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.models.common import count_params
+from repro.train.loop import LoopConfig, train
+from repro.train.optimizer import AdamWConfig
+
+PRESETS = {
+    # ~112M params: the "train a ~100M model" example driver
+    "100m": dict(
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=32000, batch=4, seq=256,
+    ),
+    "10m": dict(
+        num_layers=6, d_model=256, num_heads=8, num_kv_heads=4,
+        head_dim=32, d_ff=1024, vocab_size=8000, batch=8, seq=128,
+    ),
+    "tiny": dict(
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=1000, batch=8, seq=64,
+    ),
+}
+
+
+def main():
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = TransformerConfig(
+        name=f"lm-{args.preset}",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+        dtype="float32", remat=False,
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"model: {count_params(params)/1e6:.1f}M params")
+
+    def data():
+        step = 0
+        while True:
+            raw = lm_batch(p["batch"], p["seq"], cfg.vocab_size, seed=7, step=step)
+            yield {k: jnp.asarray(v) for k, v in raw.items()}
+            step += 1
+
+    opt_cfg = AdamWConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+        total_steps=args.steps,
+    )
+    loop_cfg = LoopConfig(
+        total_steps=args.steps,
+        checkpoint_every=max(args.steps // 5, 10),
+        checkpoint_dir=args.checkpoint_dir,
+        log_every=max(args.steps // 30, 1),
+        grad_compression=args.grad_compression,
+        num_microbatches=args.microbatches,
+    )
+    _, out = train(
+        params, lambda prm, b: loss_fn(prm, cfg, b), data(), opt_cfg, loop_cfg
+    )
+    h = out["history"]
+    print(
+        f"steps {h[0]['step']}..{h[-1]['step']}  "
+        f"loss {h[0]['loss']:.3f} -> {out['final_loss']:.3f}  "
+        f"slow steps flagged: {len(out['slow_steps'])}"
+    )
+
+
+if __name__ == "__main__":
+    main()

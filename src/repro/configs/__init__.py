@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+_ARCH_MODULES = {
+    "gemma-2b": "repro.configs.gemma_2b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "egnn": "repro.configs.egnn",
+    "gat-cora": "repro.configs.gat_cora",
+    "mace": "repro.configs.mace",
+    "gin-tu": "repro.configs.gin_tu",
+    "xdeepfm": "repro.configs.xdeepfm",
+}
+
+ARCH_NAMES = list(_ARCH_MODULES)
+
+
+def get_arch(name: str):
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).ARCH
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) cells."""
+    cells = []
+    for name in ARCH_NAMES:
+        arch = get_arch(name)
+        for shape in arch.shapes():
+            cells.append((name, shape))
+    return cells

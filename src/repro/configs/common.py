@@ -1,0 +1,99 @@
+"""Shared dry-run plumbing: DryRunSpec, ZeRO spec derivation, helpers."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class DryRunSpec:
+    """Everything dryrun.py needs to lower+compile one (arch x shape) cell."""
+
+    fn: Callable
+    args: tuple  # pytrees of ShapeDtypeStruct
+    in_shardings: Any
+    out_shardings: Any = None
+    donate_argnums: tuple = ()
+    model_flops_total: float = 0.0  # 6*N*D train / 2*N*D inference (useful)
+    flops_total: float | None = None  # analytic whole-step flops (perfmodel)
+    hbm_bytes_per_device: float | None = None  # analytic HBM traffic
+    note: str = ""
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def abstract_like(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _spec_axes(spec: P) -> set:
+    used = set()
+    for dim in spec:
+        if dim is None:
+            continue
+        if isinstance(dim, str):
+            used.add(dim)
+        else:
+            used.update(dim)
+    return used
+
+
+def zero_spec(spec: P, shape: tuple[int, ...], mesh: Mesh,
+              extra_axes: tuple[str, ...]) -> P:
+    """ZeRO-1: extend a param spec with `extra_axes` on the largest
+    unsharded, divisible dim. Falls back to fewer axes, then to the
+    original spec (always correct, just less sharded)."""
+    extra = tuple(a for a in extra_axes if a in mesh.axis_names)
+    used = _spec_axes(spec)
+    extra = tuple(a for a in extra if a not in used)
+    parts = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    for axes_try in (extra, extra[:1]):
+        if not axes_try:
+            continue
+        size = math.prod(mesh.shape[a] for a in axes_try)
+        cands = [
+            i for i, dim in enumerate(parts)
+            if dim is None and shape[i] % size == 0 and shape[i] >= size
+        ]
+        if cands:
+            best = max(cands, key=lambda i: shape[i])
+            parts[best] = axes_try if len(axes_try) > 1 else axes_try[0]
+            return P(*parts)
+    return P(*parts)
+
+
+def zero_spec_tree(spec_tree, shape_tree, mesh: Mesh,
+                   extra_axes: tuple[str, ...]):
+    return jax.tree.map(
+        lambda s, l: zero_spec(s, tuple(l.shape), mesh, extra_axes),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def flat_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult

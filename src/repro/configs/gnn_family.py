@@ -1,0 +1,209 @@
+"""GNN-family dry-run plumbing for egnn / gat-cora / mace / gin-tu.
+
+Shapes (per assignment):
+  full_graph_sm   n=2,708    m=10,556       d_feat=1,433  (full-batch, Cora)
+  minibatch_lg    n=232,965  m=114,615,892  batch=1,024 fanout 15-10 (Reddit)
+  ogb_products    n=2,449,029 m=61,859,140  d_feat=100    (full-batch-large)
+  molecule        n=30 m=64 per graph, batch=128          (batched-small)
+
+Distribution: edges sharded over every mesh axis (the irregular dimension --
+guideline G1 says sort + block them; the data pipeline pre-sorts by dst).
+Node tensors are replicated for the small/invariant models; for the
+equivariant models on big graphs the CHANNEL dim is model-sharded (MACE's
+tensor products are channel-parallel), which keeps per-device irrep tensors
+small while edges stay data-sharded.
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.common import DryRunSpec, dp_axes, flat_axes, named, pad_to, sds
+from repro.launch import perfmodel as pm
+from repro.launch.mesh import mesh_num_chips
+from repro.models.gnn import egnn as egnn_mod
+from repro.models.gnn import gat as gat_mod
+from repro.models.gnn import gin as gin_mod
+from repro.models.gnn import mace as mace_mod
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+# minibatch_lg sampled-block sizes (batch 1024, fanout 15 then 10):
+#   frontier: 1024 -> 15,360 -> 153,600 ; padded union of nodes; edges
+_MB_NODES = 1024 + 15360 + 153600
+_MB_EDGES = 15360 + 153600
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n=2708, m=10556, d=1433, classes=7),
+    "minibatch_lg": dict(n=_MB_NODES, m=_MB_EDGES, d=602, classes=41),
+    "ogb_products": dict(n=2449029, m=61859140, d=100, classes=47),
+    "molecule": dict(n=30 * 128, m=64 * 128, d=16, classes=1, graphs=128),
+}
+
+
+def _graph_abs(
+    info, *, geometric: bool, label_kind: str, mesh: Mesh
+) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct graph, PartitionSpec graph). num_graphs is static
+    and injected by the step closure, not part of the traced args."""
+    n, m, d = info["n"], info["m"], info["d"]
+    graphs = info.get("graphs", 1)
+    ea = flat_axes(mesh)
+    esz = math.prod(mesh.shape[a] for a in ea)
+    mp = pad_to(m, esz)
+    g = {
+        "src": sds((mp,), jnp.int32),
+        "dst": sds((mp,), jnp.int32),
+        "graph_ids": sds((n,), jnp.int32),
+        "node_feats": sds((n, d), jnp.float32),
+    }
+    s = {"src": P(ea), "dst": P(ea), "graph_ids": P(), "node_feats": P()}
+    if geometric:
+        g["positions"] = sds((n, 3), jnp.float32)
+        g["species"] = sds((n,), jnp.int32)
+        s |= {"positions": P(), "species": P()}
+    if label_kind == "node_int":
+        g["labels"] = sds((n,), jnp.int32)
+    elif label_kind == "graph_int":
+        g["labels"] = sds((graphs,), jnp.int32)
+    else:  # graph_float
+        g["labels"] = sds((graphs,), jnp.float32)
+    s["labels"] = P()
+    return g, s
+
+
+@dataclass
+class GNNArch:
+    name: str
+    module: Any
+    config: Any
+    smoke_config: Any
+    geometric: bool = False  # needs positions/species
+    family: str = "gnn"
+
+    def shapes(self):
+        return list(GNN_SHAPES)
+
+    def skip_reason(self, shape: str) -> str | None:
+        return None
+
+    def config_for(self, shape: str):
+        """Specialize in_dim / readout / classes per shape."""
+        import dataclasses
+
+        info = GNN_SHAPES[shape]
+        cfg = self.config
+        kw: dict = {}
+        if hasattr(cfg, "in_dim"):
+            kw["in_dim"] = info["d"]
+        if hasattr(cfg, "num_classes"):
+            kw["num_classes"] = max(info["classes"], 2)
+        if hasattr(cfg, "readout"):
+            if self.geometric:
+                kw["readout"] = "graph"  # energy-style regression
+            else:
+                kw["readout"] = "graph" if shape == "molecule" else "node"
+        return dataclasses.replace(cfg, **kw)
+
+    def label_kind(self, shape: str) -> str:
+        if self.geometric:
+            return "graph_float"
+        cfg = self.config_for(shape)
+        if getattr(cfg, "readout", "node") == "graph":
+            return "graph_int"
+        return "node_int"
+
+    def build(self, shape: str, mesh: Mesh) -> DryRunSpec:
+        info = GNN_SHAPES[shape]
+        cfg = self.config_for(shape)
+        mod = self.module
+        graph_abs, graph_specs = _graph_abs(
+            info, geometric=self.geometric,
+            label_kind=self.label_kind(shape), mesh=mesh,
+        )
+        graphs = info.get("graphs", 1)
+
+        params_abs = jax.eval_shape(
+            lambda: mod.init_params(jax.random.PRNGKey(0), cfg)
+        )
+        # params replicated (tiny); moments too.
+        pspecs = jax.tree.map(lambda _: P(), params_abs)
+        opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+        opt_abs = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), params_abs)
+        ospecs = jax.tree.map(lambda _: P(), opt_abs)
+
+        # Beyond-paper hillclimb (REPRO_OPT_LEVEL!=0): MACE's tensor
+        # products are channel-elementwise, so on the big graphs the node
+        # irrep tensors shard their CHANNEL dim over "model" while edges
+        # shard over the data axes -- the replicated-node all-reduce (the
+        # baseline's dominant collective) shrinks by the model-axis factor.
+        opt_level = int(os.environ.get("REPRO_OPT_LEVEL", "1"))
+        msize = mesh.shape.get("model", 1)
+        channel_shard = (
+            bool(opt_level)
+            and self.name == "mace"
+            and shape in ("ogb_products", "minibatch_lg")
+            and msize > 1
+            and getattr(cfg, "channels", 0) % msize == 0
+        )
+        constrain = None
+        if channel_shard:
+            from jax.sharding import NamedSharding
+
+            dp = dp_axes(mesh)
+            graph_specs["src"] = P(dp)
+            graph_specs["dst"] = P(dp)
+
+            def constrain(t, kind):
+                if kind == "node":
+                    spec = P(None, "model", None)
+                elif kind == "mix_in":
+                    # C x C mixes contract over the sharded channel dim;
+                    # re-layout to node-rows first so the transition is an
+                    # all-to-all (~size/dp) instead of a channel all-gather
+                    # (~full size). Perf log, mace iteration 2.
+                    spec = P(dp, None, None)
+                else:  # edge tensors: (edges, C, 2l+1)
+                    spec = P(dp, "model", None)
+                return jax.lax.with_sharding_constraint(
+                    t, NamedSharding(mesh, spec)
+                )
+
+        def loss_of(p, g):
+            kw = {}
+            if constrain is not None:
+                kw["constrain"] = constrain
+            return mod.loss_fn(p, cfg, dict(g, num_graphs=graphs), **kw)
+
+        def train_step(params, opt_state, g):
+            l, grads = jax.value_and_grad(loss_of)(params, g)
+            params, opt_state, _ = adamw_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, l
+
+        flops = pm.gnn_train_flops(self.name, cfg, info["n"], info["m"], info["d"])
+        chips = mesh_num_chips(mesh)
+        return DryRunSpec(
+            fn=train_step,
+            args=(params_abs, opt_abs, graph_abs),
+            in_shardings=(
+                named(mesh, pspecs),
+                named(mesh, ospecs),
+                named(mesh, graph_specs),
+            ),
+            donate_argnums=(0, 1),
+            model_flops_total=flops,
+            flops_total=flops,
+            hbm_bytes_per_device=pm.gnn_train_bytes_per_device(
+                self.name, cfg, info["n"], info["m"], info["d"], chips
+            ),
+            note=(
+                f"edge-parallel; channel_shard={channel_shard} "
+                f"(REPRO_OPT_LEVEL={opt_level})"
+            ),
+        )

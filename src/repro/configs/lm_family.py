@@ -1,0 +1,289 @@
+"""LM-family dry-run/arch plumbing shared by the five assigned LM configs.
+
+Shapes (per assignment):
+  train_4k     seq 4096,   global_batch 256   (train_step)
+  prefill_32k  seq 32768,  global_batch 32    (serve prefill forward)
+  decode_32k   seq 32768,  global_batch 128   (serve_step, KV cache)
+  long_500k    seq 524288, global_batch 1     (serve_step; SWA archs only)
+
+REPRO_OPT_LEVEL=0 reproduces the paper-faithful baseline schedules;
+the default (1) enables the beyond-paper optimizations recorded in
+EXPERIMENTS.md section Perf:
+  - ZeRO reduce-scatter gradient accumulation (vs per-microbatch
+    all-reduce of full gradients),
+  - fewer microbatches for the dense LMs (activation memory allows it),
+  - fp8 MoE dispatch all-to-all (DeepSeek-style), set per-config.
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import (
+    DryRunSpec,
+    dp_axes,
+    named,
+    sds,
+    zero_spec_tree,
+)
+from repro.launch import perfmodel as pm
+from repro.launch.mesh import mesh_num_chips
+from repro.distributed.sharding import PathRules, ShardingRules
+from repro.models.transformer import (
+    TransformerConfig,
+    init_kv_cache,
+    init_params,
+    loss_fn,
+    serve_step,
+)
+from repro.models.transformer import forward as lm_forward
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def lm_path_rules(cfg: TransformerConfig, mesh: Mesh) -> PathRules:
+    m = "model" if "model" in mesh.axis_names else None
+    ep = None
+    if cfg.moe is not None:
+        ep_axes = tuple(a for a in cfg.moe.ep_axes if a in mesh.axis_names)
+        if ep_axes and cfg.moe.num_experts % math.prod(
+            mesh.shape[a] for a in ep_axes
+        ) == 0:
+            ep = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    rules = [
+        (r"(^|/)embed$", P(m, None)),
+        (r"(^|/)unembed$", P(None, m)),
+        (r"mtp_layer/attn/w(q|q_a|q_b|kv_b)$", P(None, m)),
+        (r"mtp_layer/attn/wo$", P(m, None)),
+        (r"mtp_layer/ffn/w_(gate|up)$", P(None, m)),
+        (r"mtp_layer/ffn/w_down$", P(m, None)),
+        (r"mtp_layer/", P()),  # catch-all: unstacked ranks, keep replicated
+        (r"moe/router$", P()),
+        (r"moe/w_(gate|up)_shared$", P(None, None, m)),
+        (r"moe/w_down_shared$", P(None, m, None)),
+    ]
+    if ep is not None:
+        rules += [
+            (r"moe/w_(gate|up|down)$", P(None, ep, None, None)),
+        ]
+    else:
+        # expert-TP layout (Mixtral: 8 experts < 16-wide axis)
+        rules += [
+            (r"moe/w_(gate|up)$", P(None, None, None, m)),
+            (r"moe/w_down$", P(None, None, m, None)),
+        ]
+    rules += [
+        (r"attn/w(q|k|v|q_a|q_b|kv_b)$", P(None, None, m)),
+        (r"attn/wo$", P(None, m, None)),
+        (r"ffn/w_(gate|up)$", P(None, None, m)),
+        (r"ffn/w_down$", P(None, m, None)),
+    ]
+    return PathRules(rules)
+
+
+def _cache_specs(cfg: TransformerConfig, cache_abs, mesh: Mesh, batch: int):
+    """Cache sharding: batch over (pod, data) when divisible, then kv-heads
+    over model when divisible, else the sequence dim over model."""
+    dp = dp_axes(mesh)
+    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    batch_dim = dp if (dp and batch % dp_size == 0 and batch >= dp_size) else None
+    msize = mesh.shape.get("model", 1)
+
+    def spec_of(leaf):
+        if leaf.ndim == 5:  # (L, B, C, hkv, hd)
+            heads = leaf.shape[3]
+            if heads % msize == 0 and msize > 1:
+                return P(None, batch_dim, None, "model", None)
+            if leaf.shape[2] % msize == 0:
+                return P(None, batch_dim, "model", None, None)
+            return P(None, batch_dim, None, None, None)
+        # MLA latent: (L, B, C, r)
+        if leaf.shape[2] % msize == 0:
+            return P(None, batch_dim, "model", None)
+        return P(None, batch_dim, None, None)
+
+    return jax.tree.map(spec_of, cache_abs)
+
+
+@dataclass
+class LMArch:
+    name: str
+    config: TransformerConfig
+    smoke_config: TransformerConfig
+    sub_quadratic: bool = False  # SWA/SSM/linear-attn -> can run long_500k
+    train_microbatches: int = 8
+    moment_dtype: str = "float32"
+    family: str = "lm"
+
+    def shapes(self):
+        return list(LM_SHAPES)
+
+    def skip_reason(self, shape: str) -> str | None:
+        if shape == "long_500k" and not self.sub_quadratic:
+            return (
+                "full quadratic attention; 500k-token decode excluded per "
+                "assignment (run only for SSM/hybrid/sliding-window archs)"
+            )
+        return None
+
+    # ------------------------------------------------------------------
+    def build(self, shape: str, mesh: Mesh) -> DryRunSpec:
+        info = LM_SHAPES[shape]
+        cfg = self.config
+        rules = ShardingRules().for_mesh(mesh)
+        params_abs = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg)
+        )
+        pspecs = lm_path_rules(cfg, mesh).spec_tree(params_abs)
+        batch, seq = info["batch"], info["seq"]
+        dp = dp_axes(mesh)
+        n_active = cfg.active_params()
+        chips = mesh_num_chips(mesh)
+
+        if info["kind"] == "train":
+            opt_cfg = AdamWConfig(moment_dtype=self.moment_dtype)
+            opt_abs = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), params_abs)
+            ospecs = {
+                "step": P(),
+                "m": zero_spec_tree(pspecs, params_abs, mesh, dp),
+                "v": zero_spec_tree(pspecs, params_abs, mesh, dp),
+            }
+            batch_abs = {
+                "tokens": sds((batch, seq), jnp.int32),
+                "labels": sds((batch, seq), jnp.int32),
+            }
+            bspecs = {"tokens": P(dp, None), "labels": P(dp, None)}
+            opt_level = int(os.environ.get("REPRO_OPT_LEVEL", "1"))
+            nmb = self.train_microbatches
+            if opt_level and cfg.moe is None:
+                # dense LMs fit larger microbatches; fewer accumulation
+                # rounds = fewer cross-replica gradient reductions
+                nmb = min(nmb, 2)
+            grad_specs = zero_spec_tree(pspecs, params_abs, mesh, dp)
+
+            def _zero_constrain(g):
+                # Pin gradients to the ZeRO (moment) layout: XLA then emits
+                # reduce-scatter per microbatch instead of all-reduce of
+                # full gradients (the dominant baseline collective).
+                if not opt_level:
+                    return g
+                return jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, s)
+                    ),
+                    g,
+                    grad_specs,
+                )
+
+            def train_step(params, opt_state, b):
+                def loss_of(p, bb):
+                    return loss_fn(p, cfg, bb, mesh=mesh, rules=rules)
+
+                if nmb > 1:
+                    def body(carry, i):
+                        acc_l, acc_g = carry
+                        mb = jax.tree.map(
+                            lambda x: jax.lax.dynamic_slice_in_dim(
+                                x, i * (x.shape[0] // nmb), x.shape[0] // nmb, 0
+                            ),
+                            b,
+                        )
+                        l, g = jax.value_and_grad(loss_of)(params, mb)
+                        g = _zero_constrain(g)
+                        return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+                    zeros = _zero_constrain(
+                        jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32), params
+                        )
+                    )
+                    (l, g), _ = jax.lax.scan(
+                        body, (jnp.float32(0), zeros), jnp.arange(nmb)
+                    )
+                    l, g = l / nmb, jax.tree.map(lambda x: x / nmb, g)
+                else:
+                    l, g = jax.value_and_grad(loss_of)(params, b)
+                    g = _zero_constrain(g)
+                params, opt_state, _m = adamw_update(g, opt_state, params, opt_cfg)
+                return params, opt_state, l
+
+            return DryRunSpec(
+                fn=train_step,
+                args=(params_abs, opt_abs, batch_abs),
+                in_shardings=(
+                    named(mesh, pspecs),
+                    named(mesh, ospecs),
+                    named(mesh, bspecs),
+                ),
+                donate_argnums=(0, 1),
+                model_flops_total=6.0 * n_active * batch * seq,
+                flops_total=pm.lm_train_flops(cfg, batch, seq),
+                hbm_bytes_per_device=pm.lm_train_bytes_per_device(
+                    cfg, batch, seq, chips,
+                    moment_dtype=self.moment_dtype, microbatches=nmb,
+                ),
+                note=f"microbatches={nmb} moment_dtype={self.moment_dtype}",
+            )
+
+        if info["kind"] == "prefill":
+            batch_abs = sds((batch, seq), jnp.int32)
+            bspec = P(dp, None)
+
+            def fwd(params, tokens):
+                return lm_forward(params, cfg, tokens, mesh=mesh, rules=rules)
+
+            return DryRunSpec(
+                fn=fwd,
+                args=(params_abs, batch_abs),
+                in_shardings=(named(mesh, pspecs), named(mesh, P(dp, None))),
+                model_flops_total=2.0 * n_active * batch * seq,
+                flops_total=pm.lm_prefill_flops(cfg, batch, seq),
+                hbm_bytes_per_device=pm.lm_prefill_bytes_per_device(
+                    cfg, batch, seq, chips
+                ),
+            )
+
+        # decode
+        cache_abs = jax.eval_shape(
+            partial(init_kv_cache, cfg, batch, seq)
+        )
+        cspecs = _cache_specs(cfg, cache_abs, mesh, batch)
+        dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+        bdim = dp if (dp and batch % dp_size == 0 and batch >= dp_size) else None
+        tok_abs = sds((batch, 1), jnp.int32)
+        decode_rules = replace(rules, batch=bdim)
+
+        def step(params, cache, tokens):
+            return serve_step(
+                params, cfg, cache, tokens, jnp.int32(seq - 1),
+                mesh=mesh, rules=decode_rules,
+            )
+
+        return DryRunSpec(
+            fn=step,
+            args=(params_abs, cache_abs, tok_abs),
+            in_shardings=(
+                named(mesh, pspecs),
+                named(mesh, cspecs),
+                named(mesh, P(bdim, None)),
+            ),
+            donate_argnums=(1,),
+            model_flops_total=2.0 * n_active * batch,
+            flops_total=pm.lm_decode_flops(cfg, batch, seq),
+            hbm_bytes_per_device=pm.lm_decode_bytes_per_device(
+                cfg, batch, seq, chips
+            ),
+            note="one decode token against a seq_len KV cache",
+        )

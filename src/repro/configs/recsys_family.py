@@ -1,0 +1,173 @@
+"""RecSys-family dry-run plumbing for xdeepfm.
+
+Shapes (per assignment):
+  train_batch     batch=65,536              (train_step)
+  serve_p99       batch=512                 (online inference)
+  serve_bulk      batch=262,144             (offline scoring)
+  retrieval_cand  batch=1, 1e6 candidates   (retrieval scoring)
+
+The embedding table (39 fields x 1e6 rows x dim 10) is row-sharded over the
+"model" axis; lookups run through ops.sharded_lookup (partial gather +
+psum). Optimizer moments are ZeRO-sharded over the data axes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.common import (
+    DryRunSpec,
+    dp_axes,
+    named,
+    sds,
+    zero_spec_tree,
+)
+from repro.launch import perfmodel as pm
+from repro.launch.mesh import mesh_num_chips
+from repro.models.recsys import xdeepfm as xm
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1),
+}
+
+
+def recsys_param_specs(params_abs, mesh: Mesh):
+    m = "model" if "model" in mesh.axis_names else None
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if name in ("table", "linear", "cand_embed"):
+            return P(m, None)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+@dataclass
+class RecsysArch:
+    name: str
+    config: xm.XDeepFMConfig
+    smoke_config: xm.XDeepFMConfig
+    family: str = "recsys"
+
+    def shapes(self):
+        return list(RECSYS_SHAPES)
+
+    def skip_reason(self, shape: str) -> str | None:
+        return None
+
+    def build(self, shape: str, mesh: Mesh) -> DryRunSpec:
+        info = RECSYS_SHAPES[shape]
+        cfg = self.config
+        batch = info["batch"]
+        dp = dp_axes(mesh)
+        dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+        bdim = dp if (dp and batch % dp_size == 0 and batch >= dp_size) else None
+
+        params_abs = jax.eval_shape(
+            lambda: xm.init_params(jax.random.PRNGKey(0), cfg)
+        )
+        pspecs = recsys_param_specs(params_abs, mesh)
+        # dense-compute flops per example: CIN + MLP mac counts
+        m_f, d_e = cfg.n_fields, cfg.embed_dim
+        cin_macs = 0
+        h_prev = m_f
+        for h in cfg.cin_layers:
+            cin_macs += h * h_prev * m_f * d_e
+            h_prev = h
+        mlp_macs = 0
+        d_in = m_f * d_e
+        for d_out in cfg.mlp_layers:
+            mlp_macs += d_in * d_out
+            d_in = d_out
+        per_example = 2 * (cin_macs + mlp_macs)
+
+        if info["kind"] == "train":
+            opt_cfg = AdamWConfig(lr=1e-3, moment_dtype="float32")
+            opt_abs = jax.eval_shape(
+                partial(init_opt_state, cfg=opt_cfg), params_abs
+            )
+            ospecs = {
+                "step": P(),
+                "m": zero_spec_tree(pspecs, params_abs, mesh, dp),
+                "v": zero_spec_tree(pspecs, params_abs, mesh, dp),
+            }
+            batch_abs = {
+                "sparse_ids": sds((batch, cfg.n_fields), jnp.int32),
+                "labels": sds((batch,), jnp.int32),
+            }
+            bspecs = {"sparse_ids": P(bdim, None), "labels": P(bdim)}
+
+            def train_step(params, opt_state, b):
+                l, g = jax.value_and_grad(
+                    lambda p: xm.loss_fn(p, cfg, b)
+                )(params)
+                params, opt_state, _ = adamw_update(g, opt_state, params, opt_cfg)
+                return params, opt_state, l
+
+            return DryRunSpec(
+                fn=train_step,
+                args=(params_abs, opt_abs, batch_abs),
+                in_shardings=(
+                    named(mesh, pspecs),
+                    named(mesh, ospecs),
+                    named(mesh, bspecs),
+                ),
+                donate_argnums=(0, 1),
+                model_flops_total=3.0 * per_example * batch,  # fwd+bwd
+                flops_total=pm.recsys_step_flops(cfg, batch, train=True),
+                hbm_bytes_per_device=pm.recsys_bytes_per_device(
+                    cfg, batch, mesh_num_chips(mesh), train=True
+                ),
+            )
+
+        if info["kind"] == "serve":
+            batch_abs = {"sparse_ids": sds((batch, cfg.n_fields), jnp.int32)}
+            bspecs = {"sparse_ids": P(bdim, None)}
+
+            def serve(params, b):
+                return xm.serve_step(params, cfg, b)
+
+            return DryRunSpec(
+                fn=serve,
+                args=(params_abs, batch_abs),
+                in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+                model_flops_total=float(per_example * batch),
+                flops_total=pm.recsys_step_flops(cfg, batch, train=False),
+                hbm_bytes_per_device=pm.recsys_bytes_per_device(
+                    cfg, batch, mesh_num_chips(mesh), train=False
+                ),
+            )
+
+        # retrieval: 1 query x n_candidates batched dot
+        batch_abs = {"sparse_ids": sds((batch, cfg.n_fields), jnp.int32)}
+        bspecs = {"sparse_ids": P(None, None)}
+
+        def retrieve(params, b):
+            scores, top = xm.serve_retrieval(params, cfg, b, top_k=100)
+            return top
+
+        flops = 2.0 * cfg.n_candidates * cfg.retrieval_dim + per_example
+        chips = mesh_num_chips(mesh)
+        cand_bytes = 4.0 * cfg.n_candidates * cfg.retrieval_dim / chips
+        return DryRunSpec(
+            fn=retrieve,
+            args=(params_abs, batch_abs),
+            in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+            model_flops_total=flops,
+            flops_total=flops,
+            hbm_bytes_per_device=cand_bytes
+            + pm.recsys_bytes_per_device(cfg, batch, chips, train=False),
+        )

@@ -1,0 +1,40 @@
+"""The paper's contribution: PRAM graph algorithms adapted for TPU."""
+from repro.core.list_ranking import (
+    wylie_rank,
+    random_splitter_rank,
+    select_splitters,
+    even_splitters,
+    max_splitters_for_linear_work,
+    SplitterStats,
+)
+from repro.core.connected_components import (
+    shiloach_vishkin,
+    label_propagation,
+    sv_round_bound,
+    num_components,
+)
+from repro.core.pram import (
+    striding_indices,
+    partitioning_indices,
+    strided_view,
+    partitioned_view,
+    lockstep_walk,
+)
+
+__all__ = [
+    "wylie_rank",
+    "random_splitter_rank",
+    "select_splitters",
+    "even_splitters",
+    "max_splitters_for_linear_work",
+    "SplitterStats",
+    "shiloach_vishkin",
+    "label_propagation",
+    "sv_round_bound",
+    "num_components",
+    "striding_indices",
+    "partitioning_indices",
+    "strided_view",
+    "partitioned_view",
+    "lockstep_walk",
+]

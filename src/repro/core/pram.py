@@ -1,0 +1,94 @@
+"""PRAM -> TPU adaptation utilities (paper section 2).
+
+The paper's guidelines are reified here as concrete primitives:
+
+* G1 striding vs partitioning: the two canonical assignments of N data items
+  to p lanes, exposed as reshaping views so benchmarks can compare layouts.
+* G3 branch-freedom: ``lockstep_walk`` -- the masked while-loop that executes
+  divergent per-lane walks SIMD-style. This is the exact cost model of warp
+  divergence made explicit: the loop runs until the *slowest* lane finishes
+  and finished lanes burn masked (no-op) steps.
+* G7 oversubscription: lanes are vector elements, so p >> cores is free; the
+  trip count of ``lockstep_walk`` is the software analogue of the hardware
+  scheduler's load-balancing window.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def striding_indices(n: int, p: int) -> Array:
+    """(steps, p) index matrix: lane i touches A[i + s*p] at step s.
+
+    Consecutive lanes touch consecutive addresses within a step -- the
+    coalesced layout on GPU, and the unit-stride vectorized layout on TPU.
+    Requires p | n (pad first otherwise).
+    """
+    if n % p:
+        raise ValueError(f"striding requires p|n, got n={n} p={p}")
+    return jnp.arange(n, dtype=jnp.int32).reshape(n // p, p)
+
+
+def partitioning_indices(n: int, p: int) -> Array:
+    """(steps, p) index matrix: lane i touches A[i*(n/p) + s] at step s.
+
+    The cache-friendly multicore layout; on GPU/TPU each step's lane
+    addresses are n/p apart -> one memory transaction per lane.
+    """
+    if n % p:
+        raise ValueError(f"partitioning requires p|n, got n={n} p={p}")
+    return (
+        jnp.arange(p, dtype=jnp.int32)[None, :] * (n // p)
+        + jnp.arange(n // p, dtype=jnp.int32)[:, None]
+    )
+
+
+def strided_view(x: Array, p: int) -> Array:
+    """Reshape (n,) -> (steps, p) so that row s holds step-s lane values."""
+    return x.reshape(-1, p)
+
+
+def partitioned_view(x: Array, p: int) -> Array:
+    return x.reshape(p, -1).T
+
+
+def lockstep_walk(
+    state: Any,
+    active_fn: Callable[[Any], Array],
+    step_fn: Callable[[Any, Array], Any],
+    max_steps: int | None = None,
+) -> tuple[Any, Array]:
+    """Run per-lane walks in SIMD lockstep until every lane is done.
+
+    Args:
+        state: pytree of per-lane (and shared) arrays.
+        active_fn: state -> (p,) bool mask of lanes still walking.
+        step_fn: (state, active) -> state; must itself be branch-free and
+            use `active` to mask updates (guideline G3).
+        max_steps: optional hard bound (safety for adversarial inputs).
+
+    Returns:
+        (final_state, steps_taken). steps_taken is the trip count = the
+        maximum lane walk length, i.e. the divergence cost the paper's
+        Table 3 measures via sub-list length distributions.
+    """
+
+    def cond(carry):
+        state, steps = carry
+        ok = jnp.any(active_fn(state))
+        if max_steps is not None:
+            ok = jnp.logical_and(ok, steps < max_steps)
+        return ok
+
+    def body(carry):
+        state, steps = carry
+        active = active_fn(state)
+        return step_fn(state, active), steps + 1
+
+    final, steps = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return final, steps

@@ -1,0 +1,4 @@
+"""Synthetic data pipelines (KISS-driven, as in the paper's experiments)."""
+from repro.data.pipeline import PrefetchIterator
+
+__all__ = ["PrefetchIterator"]

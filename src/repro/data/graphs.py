@@ -1,0 +1,152 @@
+"""Graph dataset builders for the four assigned GNN shapes.
+
+All graphs are KISS-generated with the paper's generators (ops/kiss.py) so
+benchmarks, smoke tests and dry-runs share one distribution. Edges are
+returned SORTED BY DESTINATION (guideline G1) with ``indices_are_sorted``
+usable downstream.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ops.kiss import KissRng, random_graph
+from repro.ops.neighbor_sampler import NeighborSampler, edges_to_csr
+
+
+def _sort_by_dst(src: np.ndarray, dst: np.ndarray):
+    order = np.argsort(dst, kind="stable")
+    return src[order], dst[order]
+
+
+def full_graph(
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    num_classes: int = 7,
+    *,
+    with_positions: bool = False,
+    num_species: int = 10,
+    seed: int = 0,
+) -> dict:
+    """Cora-like / products-like full-batch node-classification graph."""
+    rng = KissRng(seed, 8192)
+    ends = rng.uniform_ints((n_edges, 2), n_nodes)
+    src, dst = _sort_by_dst(
+        ends[:, 0].astype(np.int32), ends[:, 1].astype(np.int32)
+    )
+    feats = (
+        rng.uniform_ints((n_nodes, d_feat), 1000).astype(np.float32) / 500.0 - 1.0
+    )
+    g = {
+        "node_feats": feats,
+        "src": src,
+        "dst": dst,
+        "labels": rng.uniform_ints((n_nodes,), num_classes).astype(np.int32),
+        "graph_ids": np.zeros(n_nodes, np.int32),
+        "num_graphs": 1,
+    }
+    if with_positions:
+        g["positions"] = (
+            rng.uniform_ints((n_nodes, 3), 2000).astype(np.float32) / 100.0
+        )
+        g["species"] = rng.uniform_ints((n_nodes,), num_species).astype(np.int32)
+    return g
+
+
+def molecule_batch(
+    batch: int,
+    nodes_per_graph: int = 30,
+    edges_per_graph: int = 64,
+    d_feat: int = 16,
+    num_species: int = 10,
+    seed: int = 0,
+) -> dict:
+    """Batched small molecules (single disjoint-union graph)."""
+    rng = KissRng(seed, 4096)
+    n = batch * nodes_per_graph
+    m = batch * edges_per_graph
+    ends = rng.uniform_ints((m, 2), nodes_per_graph)
+    offs = np.repeat(
+        np.arange(batch, dtype=np.int64) * nodes_per_graph, edges_per_graph
+    )
+    src, dst = _sort_by_dst(
+        (ends[:, 0] + offs).astype(np.int32), (ends[:, 1] + offs).astype(np.int32)
+    )
+    return {
+        "node_feats": rng.uniform_ints((n, d_feat), 1000).astype(np.float32)
+        / 500.0
+        - 1.0,
+        "positions": rng.uniform_ints((n, 3), 2000).astype(np.float32) / 200.0,
+        "species": rng.uniform_ints((n,), num_species).astype(np.int32),
+        "src": src,
+        "dst": dst,
+        "labels": rng.uniform_ints((batch,), 1000).astype(np.float32) / 500.0 - 1.0,
+        "graph_ids": np.repeat(
+            np.arange(batch, dtype=np.int32), nodes_per_graph
+        ),
+        "num_graphs": batch,
+    }
+
+
+def sampled_minibatch(
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    batch_nodes: int,
+    fanouts: list[int],
+    num_classes: int = 41,
+    seed: int = 0,
+) -> dict:
+    """minibatch_lg: a real neighbor-sampled block batch (Reddit-scale).
+
+    The returned dict contains per-hop (src, dst_index) blocks flattened to
+    one padded edge set over the union frontier, plus seed-node labels.
+    """
+    base_edges = random_graph(n_nodes, 2 * n_edges / (n_nodes * (n_nodes - 1)), seed)
+    indptr, indices = edges_to_csr(base_edges, n_nodes)
+    sampler = NeighborSampler(indptr, indices, seed=seed + 1)
+    rng = KissRng(seed + 2, 4096)
+    seeds = rng.uniform_ints((batch_nodes,), n_nodes).astype(np.int64)
+    blocks = sampler.sample_multihop(seeds, fanouts)
+
+    # Flatten blocks into one local graph: nodes = all frontier nodes.
+    all_nodes = np.concatenate(
+        [blocks[0].dst_nodes] + [b.src_nodes for b in blocks]
+    )
+    uniq, inv = np.unique(all_nodes, return_inverse=True)
+    # positions of each hop's arrays inside `inv`
+    out_src, out_dst = [], []
+    cursor = len(blocks[0].dst_nodes)
+    dst_local = {int(v): i for i, v in enumerate(blocks[0].dst_nodes)}
+    frontier_local = inv[: len(blocks[0].dst_nodes)]
+    prev_local = frontier_local
+    prev_nodes = blocks[0].dst_nodes
+    for b in blocks:
+        src_local = inv[cursor : cursor + len(b.src_nodes)]
+        cursor += len(b.src_nodes)
+        out_src.append(src_local.astype(np.int32))
+        out_dst.append(prev_local[b.dst_index].astype(np.int32))
+        prev_local = src_local
+        prev_nodes = b.src_nodes
+    src = np.concatenate(out_src)
+    dst = np.concatenate(out_dst)
+    order = np.argsort(dst, kind="stable")
+    feats = (
+        KissRng(seed + 3, 4096)
+        .uniform_ints((len(uniq), d_feat), 1000)
+        .astype(np.float32)
+        / 500.0
+        - 1.0
+    )
+    labels = np.full(len(uniq), -1, np.int32)
+    labels[frontier_local] = rng.uniform_ints(
+        (batch_nodes,), num_classes
+    ).astype(np.int32)
+    return {
+        "node_feats": feats,
+        "src": src[order].astype(np.int32),
+        "dst": dst[order].astype(np.int32),
+        "labels": labels,
+        "graph_ids": np.zeros(len(uniq), np.int32),
+        "num_graphs": 1,
+    }

@@ -1,0 +1,29 @@
+"""Synthetic LM token stream: KISS-generated Zipf-ish token ids.
+
+Deterministic per (seed, step) so a restarted/resumed job replays the same
+batches -- a fault-tolerance requirement, not a nicety.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.ops.kiss import KissRng
+
+
+def lm_batch(
+    batch: int, seq_len: int, vocab: int, *, seed: int = 0, step: int = 0
+) -> dict:
+    rng = KissRng(seed * 1_000_003 + step, n_streams=4096)
+    u = rng.uniform_ints((batch, seq_len + 1), 1 << 30).astype(np.float64)
+    # Zipf-ish skew: squash uniform draws through a power law.
+    z = (u / float(1 << 30)) ** 4.0
+    toks = (z * (vocab - 1)).astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:].astype(np.int32)}
+
+
+def lm_iterator(batch: int, seq_len: int, vocab: int, seed: int = 0):
+    from repro.data.pipeline import PrefetchIterator
+
+    return PrefetchIterator(
+        lambda i: lm_batch(batch, seq_len, vocab, seed=seed, step=i)
+    )

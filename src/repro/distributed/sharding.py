@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules and path-based PartitionSpec assignment.
+
+Models annotate activations/params with *logical* axes (batch, heads, d_ff,
+vocab, expert, nodes, edges, table_rows). A ``ShardingRules`` table maps
+those to physical mesh axes; the same model code then runs on the single-pod
+(data, model) mesh, the multi-pod (pod, data, model) mesh, or a 1-device
+test mesh without edits.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis (None = replicate)."""
+
+    batch: tuple[str, ...] | str | None = ("pod", "data")
+    seq: str | None = None  # sequence sharding for long-context decode
+    heads: str | None = "model"
+    d_ff: str | None = "model"
+    vocab: str | None = "model"
+    expert: str | None = "model"
+    edges: tuple[str, ...] | str | None = ("pod", "data", "model")
+    nodes: str | None = None  # GNN node tensors replicated by default
+    table_rows: str | None = "model"  # recsys embedding-table rows
+    stage: str | None = None  # pipeline axis, usually "pod"
+
+    def for_mesh(self, mesh: Mesh) -> "ShardingRules":
+        """Drop references to axes the mesh does not have."""
+
+        def fix(ax):
+            if ax is None:
+                return None
+            if isinstance(ax, str):
+                return ax if ax in mesh.axis_names else None
+            kept = tuple(a for a in ax if a in mesh.axis_names)
+            return kept if kept else None
+
+        kw = {k: fix(getattr(self, k)) for k in self.__dataclass_fields__}
+        return ShardingRules(**kw)
+
+
+# Default rule tables per model family; hillclimbs override these.
+LM_RULES = ShardingRules()
+LM_DECODE_RULES = replace(ShardingRules(), batch=("pod", "data"))
+LM_LONG_DECODE_RULES = replace(ShardingRules(), batch=None, seq="data")
+GNN_RULES = ShardingRules(batch=("pod", "data"))
+RECSYS_RULES = ShardingRules()
+
+
+def spec_for(rules: ShardingRules, *logical_axes: str | None) -> P:
+    """Build a PartitionSpec from logical axis names (None = replicated dim)."""
+    parts = []
+    for ax in logical_axes:
+        if ax is None:
+            parts.append(None)
+            continue
+        phys = getattr(rules, ax)
+        parts.append(phys)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, mesh: Mesh, rules: ShardingRules, *axes) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without a mesh."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(rules.for_mesh(mesh), *axes))
+    )
+
+
+@dataclass
+class PathRules:
+    """Ordered (regex -> PartitionSpec) table matched against param paths.
+
+    First match wins; unmatched leaves are replicated. Used to derive the
+    in_shardings pytree for pjit from an init-shape pytree.
+    """
+
+    rules: list[tuple[str, P]] = field(default_factory=list)
+
+    def spec_tree(self, shapes: dict) -> dict:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+        specs = []
+        for path, _leaf in flat:
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            for pat, spec in self.rules:
+                if re.search(pat, name):
+                    specs.append(spec)
+                    break
+            else:
+                specs.append(P())
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def drop_missing_axes(spec_tree, mesh: Mesh):
+    """Remove mesh-absent axis names from every PartitionSpec in a tree."""
+
+    def fix_spec(s: P) -> P:
+        parts = []
+        for dim in s:
+            if dim is None:
+                parts.append(None)
+            elif isinstance(dim, str):
+                parts.append(dim if dim in mesh.axis_names else None)
+            else:
+                kept = tuple(a for a in dim if a in mesh.axis_names)
+                parts.append(kept if kept else None)
+        return P(*parts)
+
+    return jax.tree.map(fix_spec, spec_tree, is_leaf=lambda x: isinstance(x, P))

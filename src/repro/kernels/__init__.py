@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel directory holds:
+  <name>.py  -- pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     -- jit'd public wrapper (chooses pallas vs xla path)
+  ref.py     -- pure-jnp oracle used by tests and by CPU dry-runs
+
+Kernels are written for TPU as the target and validated with
+``interpret=True`` on CPU (the kernel body runs as plain JAX ops).
+"""
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Interpret mode everywhere except a real TPU backend."""
+    return not on_tpu()

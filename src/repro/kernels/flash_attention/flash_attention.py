@@ -1,0 +1,130 @@
+"""Blocked online-softmax attention (FlashAttention-style) for the LM archs.
+
+VMEM tiling: each grid step holds one (block_q, d) query tile, one
+(block_k, d) key tile and value tile; the (block_q, block_k) score tile is
+the only quadratic intermediate and it never leaves VMEM. Accumulators
+(m, l, acc) live in VMEM scratch across the kj grid axis.
+
+Supports causal masking, sliding windows (Mixtral SWA; window w => score
+kept iff 0 <= qpos - kpos < w), and GQA via the kv index_map (query head h
+reads kv head h // group -- no materialized KV repetition in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    qpos = qi * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+    kpos = kj * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = alpha * acc_prev + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_new, 1e-30)  # fully masked rows -> zeros
+        o_ref[0] = (acc_new / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B*Hq, Sq, D)
+    k: jax.Array,  # (B*Hkv, Sk, D)
+    v: jax.Array,  # (B*Hkv, Sk, D)
+    *,
+    num_q_heads: int,
+    num_kv_heads: int,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if sq % block_q or sk % block_k:
+        raise ValueError("pad sequence lengths to the block sizes")
+    group = num_q_heads // num_kv_heads
+    n_q, n_k = sq // block_q, sk // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    def kv_index(bhi, qi, kj):
+        b = bhi // num_q_heads
+        h = bhi % num_q_heads
+        return (b * num_kv_heads + h // group, kj, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, kj: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, kj: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

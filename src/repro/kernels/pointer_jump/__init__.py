@@ -1,0 +1,3 @@
+from repro.kernels.pointer_jump.ops import pointer_jump
+
+__all__ = ["pointer_jump"]

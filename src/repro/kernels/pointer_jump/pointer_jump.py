@@ -1,0 +1,64 @@
+"""Single-kernel VMEM-resident pointer jumping.
+
+TPU adaptation of the paper's "single thread block + __syncthreads()" fast
+path (section 3.1): when the list fits on-chip, run ALL O(log p) jumping
+steps inside one kernel so intermediate (rank, next) states never round-trip
+to HBM. The paper uses this for the p-node splitter list in RS4; so do we.
+
+The whole problem is one VMEM block (p <= ~1M int32 comfortably fits the
+~16MB VMEM twice over); the PRAM synchronization barrier between steps is
+the sequential `fori_loop` iteration boundary -- zero cost, exactly the
+guideline-G4 win the paper measured.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pointer_jump_kernel(nxt_ref, w_ref, rank_ref, last_ref, *, iters: int):
+    nxt = nxt_ref[...]
+    rank = w_ref[...]
+
+    def body(_, state):
+        rank, nxt = state
+        # VMEM gather: one row fetch per lane, on-chip (no HBM traffic).
+        rank = rank + jnp.take(rank, nxt, axis=0)
+        nxt = jnp.take(nxt, nxt, axis=0)
+        return rank, nxt
+
+    rank, nxt = jax.lax.fori_loop(0, iters, body, (rank, nxt))
+    rank_ref[...] = rank
+    last_ref[...] = nxt
+
+
+def pointer_jump_pallas(
+    nxt: jax.Array, w: jax.Array, *, iters: int, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Jump `iters` times: returns (suffix_sums, final_pointers).
+
+    rank[j] converges to the w-sum over the pointer path [j .. terminal)
+    provided w[terminal] == 0 and nxt[terminal] == terminal.
+    """
+    p = nxt.shape[0]
+    kernel = functools.partial(_pointer_jump_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), w.dtype),
+            jax.ShapeDtypeStruct((p,), nxt.dtype),
+        ],
+        interpret=interpret,
+    )(nxt, w)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the pointer_jump kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pointer_jump_ref(
+    nxt: jax.Array, w: jax.Array, *, iters: int
+) -> tuple[jax.Array, jax.Array]:
+    def body(_, state):
+        rank, nxt = state
+        return rank + rank[nxt], nxt[nxt]
+
+    rank, nxt = jax.lax.fori_loop(0, iters, body, (w, nxt))
+    return rank, nxt

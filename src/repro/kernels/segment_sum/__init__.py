@@ -1,0 +1,3 @@
+from repro.kernels.segment_sum.ops import segment_sum_sorted
+
+__all__ = ["segment_sum_sorted"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the blocked sorted segment sum."""
+from __future__ import annotations
+
+import jax
+
+
+def segment_sum_sorted_ref(
+    data: jax.Array, seg_ids: jax.Array, num_segments: int
+) -> jax.Array:
+    # Padding rows carry seg_id == num_segments and are dropped by scatter.
+    return jax.ops.segment_sum(
+        data, seg_ids, num_segments + 1, indices_are_sorted=True
+    )[:num_segments]

@@ -1,0 +1,3 @@
+from repro.kernels.splitter_aggregate.ops import splitter_aggregate
+
+__all__ = ["splitter_aggregate"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for splitter_aggregate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def splitter_aggregate_ref(packed: jax.Array, sprank: jax.Array) -> jax.Array:
+    return jnp.take(sprank, packed[:, 1], axis=0) - packed[:, 0]

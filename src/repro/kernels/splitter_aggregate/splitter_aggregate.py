@@ -1,0 +1,48 @@
+"""RS5 rank aggregation: the paper's "fast kernel" (Table 2).
+
+rank[j] = sprank[owner[j]] - local[j], streamed over all n nodes.
+
+This kernel is the coalescing best case the paper contrasts with RS3: the
+(local, owner) pairs are read in pure striding order (one contiguous block
+DMA per grid step) and the only irregular access -- the sprank gather -- hits
+a table of p entries that is pinned whole in VMEM for every grid step. The
+AoS (n, 2) row layout means one block fetch brings both fields (guideline
+G5's 64-bit union, as a BlockSpec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(sprank_ref, packed_ref, out_ref):
+    local = packed_ref[:, 0]
+    owner = packed_ref[:, 1]
+    # Irregular gather confined to the VMEM-resident splitter table.
+    out_ref[...] = jnp.take(sprank_ref[...], owner, axis=0) - local
+
+
+def splitter_aggregate_pallas(
+    packed: jax.Array,
+    sprank: jax.Array,
+    *,
+    block_n: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """packed: (n, 2) int32 [local_rank, owner]; sprank: (p,) int32."""
+    n = packed.shape[0]
+    p = sprank.shape[0]
+    if n % block_n:
+        raise ValueError(f"n={n} must be padded to a multiple of {block_n}")
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),  # whole table, every step
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),  # striding stream
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), sprank.dtype),
+        interpret=interpret,
+    )(sprank, packed)

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 (data, model) single pod, or 2x16x16 (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)."
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_test_mesh(
+    shape: tuple[int, ...] = (1, 1), axes: tuple[str, ...] = ("data", "model")
+) -> Mesh:
+    """Small mesh over however many devices the test process has."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def mesh_num_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

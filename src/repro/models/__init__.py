@@ -1,0 +1,1 @@
+"""Model zoo: the assigned architectures, built on the ops substrate."""

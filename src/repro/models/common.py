@@ -1,0 +1,77 @@
+"""Shared model building blocks: norms, inits, RoPE, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def trunc_normal(key, shape, scale: float, dtype=jnp.float32) -> Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def he_init(key, shape, fan_in: int, dtype=jnp.float32) -> Array:
+    return trunc_normal(key, shape, (2.0 / max(fan_in, 1)) ** 0.5, dtype)
+
+
+def lecun_init(key, shape, fan_in: int, dtype=jnp.float32) -> Array:
+    return trunc_normal(key, shape, (1.0 / max(fan_in, 1)) ** 0.5, dtype)
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma + beta).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float, positions: Array) -> tuple[Array, Array]:
+    """cos/sin tables for rotary embedding; positions (..., seq)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(
+        x.dtype
+    )
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    }[name]
+
+
+def softmax_cross_entropy(logits: Array, labels: Array, ignore_id: int = -1):
+    """Mean CE over non-ignored positions; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1
+    ).squeeze(-1)
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,3 @@
+"""GNN architectures: GIN, GAT, EGNN, MACE -- all built on the
+ops.scatter_gather / ops.segment message-passing substrate (the paper's
+irregular-access regime)."""

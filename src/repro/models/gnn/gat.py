@@ -1,0 +1,98 @@
+"""GAT (Graph Attention Network), arXiv:1710.10903. Cora config: 2 layers,
+8 hidden units, 8 heads, attention aggregation.
+
+Edge attention is SDDMM -> segment-softmax -> SpMM in the taxonomy; here:
+gather endpoints (irregular read), LeakyReLU score, segment softmax over
+destination (two reductions resolved min-CRCW-style), weighted segment sum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import lecun_init
+from repro.ops.segment import segment_softmax_dist, segment_sum_dist
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    num_layers: int = 2
+    d_hidden: int = 8
+    num_heads: int = 8
+    in_dim: int = 1433
+    num_classes: int = 7
+    negative_slope: float = 0.2
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: GATConfig) -> dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    layers = []
+    d_in = cfg.in_dim
+    keys = jax.random.split(key, cfg.num_layers)
+    for i in range(cfg.num_layers):
+        last = i == cfg.num_layers - 1
+        heads = 1 if last else cfg.num_heads
+        d_out = cfg.num_classes if last else cfg.d_hidden
+        k1, k2, k3 = jax.random.split(keys[i], 3)
+        layers.append(
+            {
+                "w": lecun_init(k1, (d_in, heads * d_out), d_in, dtype),
+                "a_src": lecun_init(k2, (heads, d_out), d_out, dtype),
+                "a_dst": lecun_init(k3, (heads, d_out), d_out, dtype),
+                "b": jnp.zeros((heads * d_out,), dtype),
+            }
+        )
+        d_in = heads * d_out if not last else d_out
+    return {"layers": layers}
+
+
+def _gat_layer(layer, cfg, h, src, dst, n, heads, d_out, psum_axes, last):
+    wh = (h @ layer["w"]).reshape(n, heads, d_out)
+    s_src = jnp.einsum("nhd,hd->nh", wh, layer["a_src"])
+    s_dst = jnp.einsum("nhd,hd->nh", wh, layer["a_dst"])
+    e = jax.nn.leaky_relu(
+        s_src[src] + s_dst[dst], negative_slope=cfg.negative_slope
+    )  # (m, heads)
+    num, den = segment_softmax_dist(e, dst, n, psum_axes)
+    msgs = wh[src] * num[..., None]  # (m, heads, d_out)
+    agg = segment_sum_dist(msgs, dst, n, psum_axes)
+    out = agg / den[..., None]
+    if last:
+        return out.mean(axis=1)  # average heads -> logits
+    return jax.nn.elu(out.reshape(n, heads * d_out) + layer["b"])
+
+
+def forward(
+    params,
+    cfg: GATConfig,
+    graph: dict[str, Array],
+    *,
+    psum_axes: tuple[str, ...] = (),
+) -> Array:
+    h = graph["node_feats"]
+    n = h.shape[0]
+    src, dst = graph["src"], graph["dst"]
+    for i, layer in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        heads = 1 if last else cfg.num_heads
+        d_out = cfg.num_classes if last else cfg.d_hidden
+        h = _gat_layer(layer, cfg, h, src, dst, n, heads, d_out, psum_axes, last)
+    return h
+
+
+def loss_fn(
+    params, cfg: GATConfig, graph, *, psum_axes: tuple[str, ...] = ()
+) -> Array:
+    logits = forward(params, cfg, graph, psum_axes=psum_axes)
+    labels = graph["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].clip(0), axis=-1)[:, 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

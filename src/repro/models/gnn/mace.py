@@ -1,0 +1,259 @@
+"""MACE (higher-order equivariant message passing), arXiv:2206.07697.
+
+Simplified-but-real MACE: l_max=2 irreps, correlation order 3, Bessel radial
+basis with polynomial cutoff, real-basis CG tensor products (so3.py), and
+per-layer invariant readouts summed into a total energy.
+
+Structure per layer:
+  A-basis  A_i^{L} = sum_j R_path(r_ij) * CG(l1,l2,L) h_j^{l1} Y_{l2}(r_ij)
+  B-basis  products of A up to correlation 3 via nested CG contractions
+  update   h'^{L} = W_A A^{L} + W_B B^{L} + W_res h^{L}
+
+Features are lists indexed by l: feats[l] has shape (n, C, 2l+1).
+The edge reduction is ops.segment (irregular-scatter regime, guideline G1:
+edges pre-sorted by destination).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import he_init
+from repro.models.gnn.so3 import cg_jnp, num_m, real_sph_harm
+from repro.ops.segment import segment_sum_dist
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    num_layers: int = 2
+    channels: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    num_species: int = 10
+    r_cut: float = 5.0
+    dtype: str = "float32"
+
+
+def _msg_paths(ls_in: list[int], l_max: int) -> list[tuple[int, int, int]]:
+    paths = []
+    for l1 in ls_in:
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if abs(l1 - l2) <= l3 <= l1 + l2:
+                    paths.append((l1, l2, l3))
+    return paths
+
+
+def _prod2_paths(l_max: int) -> list[tuple[int, int, int]]:
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l1, l_max + 1):
+            for lo in range(l_max + 1):
+                if abs(l1 - l2) <= lo <= l1 + l2:
+                    out.append((l1, l2, lo))
+    return out
+
+
+def _prod3_paths(l_max: int) -> list[tuple[int, int, int, int, int]]:
+    out = []
+    for l1, l2, l12 in _prod2_paths(l_max):
+        for l3 in range(l_max + 1):
+            for lo in range(l_max + 1):
+                if abs(l12 - l3) <= lo <= l12 + l3:
+                    out.append((l1, l2, l12, l3, lo))
+    return out
+
+
+def bessel_rbf(r: Array, n_rbf: int, r_cut: float) -> Array:
+    """Bessel radial basis with smooth polynomial cutoff (DimeNet-style)."""
+    rs = jnp.clip(r, 1e-6, r_cut)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * jnp.pi * rs[:, None] / r_cut) / rs[:, None]
+    u = jnp.clip(r / r_cut, 0.0, 1.0)[:, None]
+    envelope = 1.0 - 10.0 * u ** 3 + 15.0 * u ** 4 - 6.0 * u ** 5
+    return basis * envelope
+
+
+def init_params(key, cfg: MACEConfig) -> dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    c = cfg.channels
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    layers = []
+    ls_in = [0]
+    for i in range(cfg.num_layers):
+        mpaths = _msg_paths(ls_in, cfg.l_max)
+        p2 = _prod2_paths(cfg.l_max)
+        p3 = _prod3_paths(cfg.l_max) if cfg.correlation >= 3 else []
+        k = jax.random.split(keys[i], 8)
+        layers.append(
+            {
+                # radial MLP: (n_rbf,) -> per-(msg path, channel) weight
+                "rad_w1": he_init(k[0], (cfg.n_rbf, 64), cfg.n_rbf, dtype),
+                "rad_b1": jnp.zeros((64,), dtype),
+                "rad_w2": he_init(k[1], (64, len(mpaths) * c), 64, dtype),
+                # channel mixers
+                "mix_pre": [
+                    he_init(jax.random.fold_in(k[2], l), (c, c), c, dtype)
+                    for l in ls_in
+                ],
+                "w_A": [
+                    he_init(jax.random.fold_in(k[3], l), (c, c), c, dtype)
+                    for l in range(cfg.l_max + 1)
+                ],
+                "w_B2": (jax.random.normal(k[4], (len(p2), c)) * 0.1).astype(dtype),
+                "w_B3": (jax.random.normal(k[5], (len(p3), c)) * 0.03).astype(dtype)
+                if p3
+                else None,
+                "w_res": [
+                    he_init(jax.random.fold_in(k[6], l), (c, c), c, dtype)
+                    for l in ls_in
+                ],
+                "readout_w": he_init(k[7], (c, 1), c, dtype),
+            }
+        )
+        ls_in = list(range(cfg.l_max + 1))
+    return {
+        "species_embed": (
+            jax.random.normal(keys[-2], (cfg.num_species, c)) * 0.5
+        ).astype(dtype),
+        "layers": layers,
+        "final_w1": he_init(keys[-1], (c, 16), c, dtype),
+        "final_w2": jnp.zeros((16, 1), dtype),
+    }
+
+
+def forward(
+    params,
+    cfg: MACEConfig,
+    graph: dict[str, Array],
+    *,
+    psum_axes: tuple[str, ...] = (),
+    constrain=None,
+) -> Array:
+    """graph: species (n,) int, positions (n,3), src/dst (m,), graph_ids.
+
+    Returns per-graph energies (num_graphs,).
+
+    ``constrain(tensor, kind)`` with kind in {"node", "edge"} lets the
+    launcher pin shardings: MACE's CG products and radial weights are
+    CHANNEL-elementwise, so the channel dim shards cleanly over "model"
+    while edges shard over the data axes -- the hillclimb that removes the
+    replicated-node all-reduce on ogb_products (EXPERIMENTS.md Perf).
+    """
+    C_ = constrain or (lambda t, kind: t)
+    species = graph["species"]
+    x = graph["positions"].astype(jnp.float32)
+    src, dst = graph["src"], graph["dst"]
+    n = species.shape[0]
+    c = cfg.channels
+
+    vec = x[dst] - x[src]
+    r = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, axis=-1), 1e-12))
+    rhat = vec / r[:, None]
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.r_cut)  # (m, n_rbf)
+    sh = [real_sph_harm(l, rhat) for l in range(cfg.l_max + 1)]  # (m, 2l+1)
+
+    h0 = jnp.take(params["species_embed"], species, axis=0)  # (n, C)
+    feats = [h0[:, :, None]]  # l=0 only
+    ls_in = [0]
+    energy_nodes = jnp.zeros((n,), jnp.float32)
+
+    for layer in params["layers"]:
+        mpaths = _msg_paths(ls_in, cfg.l_max)
+        rad = jax.nn.silu(rbf @ layer["rad_w1"] + layer["rad_b1"])
+        rad = (rad @ layer["rad_w2"]).reshape(-1, len(mpaths), c)  # (m, P, C)
+
+        pre = [
+            C_(
+                jnp.einsum(
+                    "ncm,cd->ndm", C_(feats[i], "mix_in"), layer["mix_pre"][i]
+                ),
+                "node",
+            )
+            for i in range(len(ls_in))
+        ]
+
+        # ---- A-basis: message passing with CG couplings ----
+        A = [
+            jnp.zeros((n, c, num_m(l)), h0.dtype) for l in range(cfg.l_max + 1)
+        ]
+        for pi, (l1, l2, l3) in enumerate(mpaths):
+            cg = cg_jnp(l1, l2, l3, h0.dtype)
+            hj = pre[ls_in.index(l1)][src]  # (m, C, 2l1+1)
+            contrib = jnp.einsum(
+                "mca,mb,abz->mcz", hj, sh[l2], cg
+            ) * rad[:, pi, :, None]
+            contrib = C_(contrib, "edge")
+            A[l3] = A[l3] + C_(
+                segment_sum_dist(contrib, dst, n, psum_axes), "node"
+            )
+
+        # ---- B-basis: symmetric products (correlation 2 and 3) ----
+        msg = [
+            C_(
+                jnp.einsum("ncm,cd->ndm", C_(A[l], "mix_in"), layer["w_A"][l]),
+                "node",
+            )
+            for l in range(cfg.l_max + 1)
+        ]
+        for pi, (l1, l2, lo) in enumerate(_prod2_paths(cfg.l_max)):
+            cg = cg_jnp(l1, l2, lo, h0.dtype)
+            b = jnp.einsum("nca,ncb,abo->nco", A[l1], A[l2], cg)
+            msg[lo] = msg[lo] + b * layer["w_B2"][pi][None, :, None]
+        if layer["w_B3"] is not None:
+            for pi, (l1, l2, l12, l3, lo) in enumerate(_prod3_paths(cfg.l_max)):
+                cg_a = cg_jnp(l1, l2, l12, h0.dtype)
+                cg_b = cg_jnp(l12, l3, lo, h0.dtype)
+                t = jnp.einsum("nca,ncb,abi->nci", A[l1], A[l2], cg_a)
+                b = jnp.einsum("nci,ncj,ijo->nco", t, A[l3], cg_b)
+                msg[lo] = msg[lo] + b * layer["w_B3"][pi][None, :, None]
+
+        # ---- update + residual ----
+        new_feats = []
+        for l in range(cfg.l_max + 1):
+            f = msg[l]
+            if l in ls_in:
+                f = f + C_(
+                    jnp.einsum(
+                        "ncm,cd->ndm",
+                        C_(feats[ls_in.index(l)], "mix_in"),
+                        layer["w_res"][l],
+                    ),
+                    "node",
+                )
+            new_feats.append(C_(f, "node"))
+        feats = new_feats
+        ls_in = list(range(cfg.l_max + 1))
+
+        # ---- per-layer invariant readout ----
+        energy_nodes = energy_nodes + (
+            feats[0][:, :, 0] @ layer["readout_w"]
+        )[:, 0].astype(jnp.float32)
+
+    h_inv = feats[0][:, :, 0]
+    final = jax.nn.silu(h_inv @ params["final_w1"]) @ params["final_w2"]
+    energy_nodes = energy_nodes + final[:, 0].astype(jnp.float32)
+    return jax.ops.segment_sum(
+        energy_nodes, graph["graph_ids"], graph["num_graphs"]
+    )
+
+
+def loss_fn(
+    params,
+    cfg: MACEConfig,
+    graph,
+    *,
+    psum_axes: tuple[str, ...] = (),
+    constrain=None,
+) -> Array:
+    pred = forward(params, cfg, graph, psum_axes=psum_axes, constrain=constrain)
+    target = graph["labels"].astype(jnp.float32)
+    return jnp.mean((pred - target) ** 2)

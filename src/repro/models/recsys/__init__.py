@@ -1,0 +1,2 @@
+"""RecSys: xDeepFM with huge sharded embedding tables (the paper's
+irregular-gather regime at its purest: the lookup IS the hot path)."""

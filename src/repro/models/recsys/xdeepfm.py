@@ -1,0 +1,165 @@
+"""xDeepFM (arXiv:1803.05170): linear + CIN + DNN over field embeddings.
+
+Assigned config: 39 sparse fields, embed_dim 10, CIN 200-200-200, MLP
+400-400. Embedding tables are stored as ONE stacked (n_fields * vocab, dim)
+array sharded on rows over the "model" axis -- the row gather is exactly
+the paper's irregular read, and the row-major AoS layout means one fetch
+per (field, id) pair (guideline G5).
+
+CIN (Compressed Interaction Network):
+  x^{k+1}_{h} = sum_{i,j} W^{k}_{h,i,j} (x^k_i o x^0_j)   (o = Hadamard over D)
+with per-layer sum pooling over D into the final logit.
+
+The retrieval head (retrieval_cand shape) scores one user against 10^6
+candidates with a factorized dot product (CIN is pairwise and cannot score
+1M candidates per query; DESIGN.md notes this adaptation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import he_init
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_fields: int = 39
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    cin_layers: tuple[int, ...] = (200, 200, 200)
+    mlp_layers: tuple[int, ...] = (400, 400)
+    retrieval_dim: int = 64
+    n_candidates: int = 1_000_000
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: XDeepFMConfig) -> dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    rows = cfg.n_fields * cfg.vocab_per_field
+    keys = jax.random.split(key, 8 + len(cfg.cin_layers) + len(cfg.mlp_layers))
+    p: dict[str, Any] = {
+        "table": (jax.random.normal(keys[0], (rows, cfg.embed_dim)) * 0.01).astype(
+            dtype
+        ),
+        "linear": (jax.random.normal(keys[1], (rows, 1)) * 0.01).astype(dtype),
+        "bias": jnp.zeros((), dtype),
+    }
+    h_prev = cfg.n_fields
+    cin = []
+    for i, h in enumerate(cfg.cin_layers):
+        cin.append(
+            he_init(keys[2 + i], (h, h_prev, cfg.n_fields), h_prev * cfg.n_fields, dtype)
+        )
+        h_prev = h
+    p["cin"] = cin
+    p["cin_out"] = he_init(
+        keys[2 + len(cin)], (sum(cfg.cin_layers), 1), sum(cfg.cin_layers), dtype
+    )
+    mlp = []
+    d_in = cfg.n_fields * cfg.embed_dim
+    base = 3 + len(cin)
+    for i, d_out in enumerate(cfg.mlp_layers):
+        mlp.append(
+            {
+                "w": he_init(keys[base + i], (d_in, d_out), d_in, dtype),
+                "b": jnp.zeros((d_out,), dtype),
+            }
+        )
+        d_in = d_out
+    p["mlp"] = mlp
+    p["mlp_out"] = he_init(keys[-3], (d_in, 1), d_in, dtype)
+    # retrieval head: user projection + candidate tower table
+    p["retrieval_proj"] = he_init(
+        keys[-2], (d_in, cfg.retrieval_dim), d_in, dtype
+    )
+    p["cand_embed"] = (
+        jax.random.normal(keys[-1], (cfg.n_candidates, cfg.retrieval_dim)) * 0.05
+    ).astype(dtype)
+    return p
+
+
+def _lookup(params, cfg, sparse_ids: Array) -> Array:
+    """sparse_ids: (B, n_fields) -> (B, n_fields, D). One row gather per
+    (field, id); ids are offset into the stacked table."""
+    offsets = (
+        jnp.arange(cfg.n_fields, dtype=jnp.int32) * cfg.vocab_per_field
+    )[None, :]
+    rows = sparse_ids.astype(jnp.int32) + offsets
+    return jnp.take(params["table"], rows.reshape(-1), axis=0).reshape(
+        sparse_ids.shape[0], cfg.n_fields, cfg.embed_dim
+    )
+
+
+def _cin(params, x0: Array) -> Array:
+    """x0: (B, m, D) -> pooled (B, sum(H_k))."""
+    xk = x0
+    pooled = []
+    for w in params["cin"]:
+        # z: (B, Hk_prev, m, D) outer Hadamard; compressed by W -> (B, H, D)
+        xk = jnp.einsum("bhd,bmd,ohm->bod", xk, x0, w)
+        pooled.append(jnp.sum(xk, axis=-1))  # sum-pool over D
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def _dnn_hidden(params, x0_flat: Array) -> Array:
+    h = x0_flat
+    for layer in params["mlp"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    return h
+
+
+def forward(params, cfg: XDeepFMConfig, batch: dict[str, Array]) -> Array:
+    """batch["sparse_ids"]: (B, n_fields) -> logits (B,)."""
+    sparse_ids = batch["sparse_ids"]
+    b = sparse_ids.shape[0]
+    emb = _lookup(params, cfg, sparse_ids)  # (B, m, D)
+
+    offsets = (
+        jnp.arange(cfg.n_fields, dtype=jnp.int32) * cfg.vocab_per_field
+    )[None, :]
+    rows = sparse_ids.astype(jnp.int32) + offsets
+    linear = jnp.take(params["linear"], rows.reshape(-1), axis=0).reshape(
+        b, cfg.n_fields
+    ).sum(axis=-1)
+
+    cin_logit = (_cin(params, emb) @ params["cin_out"])[:, 0]
+    hidden = _dnn_hidden(params, emb.reshape(b, -1))
+    dnn_logit = (hidden @ params["mlp_out"])[:, 0]
+    return linear + cin_logit + dnn_logit + params["bias"]
+
+
+def loss_fn(params, cfg: XDeepFMConfig, batch: dict[str, Array]) -> Array:
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"].astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def serve_step(params, cfg: XDeepFMConfig, batch: dict[str, Array]) -> Array:
+    """CTR scores in [0,1] (serve_p99 / serve_bulk shapes)."""
+    return jax.nn.sigmoid(forward(params, cfg, batch))
+
+
+def serve_retrieval(
+    params, cfg: XDeepFMConfig, batch: dict[str, Array], top_k: int = 100
+):
+    """retrieval_cand shape: one query scored against the candidate tower.
+
+    batch["sparse_ids"]: (1, n_fields). Returns (scores (n_cand,), top-k ids).
+    Batched dot, not a loop: (1, r) @ (r, n_cand).
+    """
+    emb = _lookup(params, cfg, batch["sparse_ids"])
+    hidden = _dnn_hidden(params, emb.reshape(emb.shape[0], -1))
+    user = hidden @ params["retrieval_proj"]  # (1, r)
+    scores = (user @ params["cand_embed"].T)[0]  # (n_cand,)
+    top = jax.lax.top_k(scores, top_k)
+    return scores, top

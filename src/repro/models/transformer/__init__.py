@@ -1,0 +1,20 @@
+from repro.models.transformer.config import TransformerConfig, MoEConfig
+from repro.models.transformer.model import (
+    init_params,
+    forward,
+    loss_fn,
+    init_kv_cache,
+    serve_step,
+    prefill,
+)
+
+__all__ = [
+    "TransformerConfig",
+    "MoEConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_kv_cache",
+    "serve_step",
+    "prefill",
+]

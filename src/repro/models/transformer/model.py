@@ -1,0 +1,390 @@
+"""Decoder LM: init / forward / loss / KV-cache serving.
+
+Layers are scanned (stacked params) so the HLO stays O(1) in depth -- a
+hard requirement for compiling 61-layer DeepSeek-V3 on the 512-device
+dry-run mesh. MoE models keep two stacks: the leading dense layers and the
+MoE layers (DeepSeek-V3: 3 dense + 58 MoE).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules, constrain, spec_for
+from repro.ops.sharded_lookup import sharded_row_gather
+from repro.models.common import (
+    activation_fn,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.models.transformer.attention import (
+    gqa_attention,
+    gqa_decode,
+    init_gqa_params,
+    init_mla_params,
+    mla_attention,
+    mla_decode,
+)
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.moe import init_moe_params, moe_ffn
+
+Array = jax.Array
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg, dtype):
+    if cfg.attention == "mla":
+        return init_mla_params(key, cfg, dtype)
+    return init_gqa_params(key, cfg, dtype)
+
+
+def _init_dense_ffn(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def _init_layer(key, cfg, dtype, *, use_moe: bool):
+    ka, kf = jax.random.split(key)
+    layer = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": _init_attn(ka, cfg, dtype),
+    }
+    if use_moe:
+        layer["moe"] = init_moe_params(kf, cfg, dtype)
+    else:
+        layer["ffn"] = _init_dense_ffn(kf, cfg, dtype)
+    return layer
+
+
+def init_params(key, cfg: TransformerConfig) -> dict[str, Any]:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 6)
+    n_dense = cfg.num_dense_layers_effective()
+    n_moe = cfg.num_moe_layers()
+    params: dict[str, Any] = {
+        "embed": (
+            jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size))
+            * cfg.d_model ** -0.5
+        ).astype(dtype)
+    if n_dense:
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype, use_moe=False)
+        )(jax.random.split(keys[2], n_dense))
+    if n_moe:
+        params["moe_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype, use_moe=True)
+        )(jax.random.split(keys[3], n_moe))
+    if cfg.mtp_depth:
+        params["mtp_layer"] = _init_layer(keys[4], cfg, dtype, use_moe=False)
+        params["mtp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_lookup(params, cfg, tokens, mesh, rules):
+    """Vocab-sharded token embedding via explicit partial-gather + psum."""
+    if mesh is None or mesh.empty:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        r = rules.for_mesh(mesh)
+        x = sharded_row_gather(
+            params["embed"], tokens, mesh, r.vocab,
+            idx_spec=spec_for(r, "batch", None),
+        )
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, mesh, rules, "batch", None, None)
+
+
+def _dense_ffn(p, cfg, x):
+    # bf16 end-to-end: the MXU accumulates f32 internally, and bf16
+    # activations/cotangents HALVE every TP collective (Perf log).
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["w_up"]
+    )
+    # NOTE: no preferred_element_type here -- bf16 partials mean the TP
+    # all-reduce of the down projection moves half the bytes (Perf log).
+    return jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), p["w_down"])
+
+
+def _attn(p, cfg, x, positions, mesh=None, rules=None):
+    if cfg.attention == "mla":
+        return mla_attention(p, cfg, x, positions, mesh=mesh, rules=rules)
+    return gqa_attention(p, cfg, x, positions, mesh=mesh, rules=rules)
+
+
+def _layer_fwd(cfg, mesh, rules, use_moe):
+    act = activation_fn(cfg.activation)
+
+    def f(x, layer, positions):
+        h = x + _attn(
+            layer["attn"], cfg, rms_norm(x, layer["ln1"]), positions,
+            mesh=mesh, rules=rules,
+        )
+        h = constrain(h, mesh, rules, "batch", None, None)
+        hn = rms_norm(h, layer["ln2"])
+        if use_moe:
+            out = h + moe_ffn(layer["moe"], cfg, hn, act, mesh=mesh)
+        else:
+            out = h + _dense_ffn(layer["ffn"], cfg, hn)
+        return constrain(out, mesh, rules, "batch", None, None)
+
+    return f
+
+
+def _scan_layers(x, stack, fwd, positions, remat: bool):
+    f = (lambda c, l: (fwd(c, l, positions), None))
+    if remat:
+        f = jax.checkpoint(f, prevent_cse=False)
+    x, _ = jax.lax.scan(f, x, stack)
+    return x
+
+
+def forward(
+    params,
+    cfg: TransformerConfig,
+    tokens: Array,
+    *,
+    mesh: Mesh | None = None,
+    rules: ShardingRules | None = None,
+) -> Array:
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    rules = rules or ShardingRules()
+    b, s = tokens.shape
+    x = _embed_lookup(params, cfg, tokens, mesh, rules)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if "dense_layers" in params:
+        x = _scan_layers(
+            x,
+            params["dense_layers"],
+            _layer_fwd(cfg, mesh, rules, use_moe=False),
+            positions,
+            cfg.remat,
+        )
+    if "moe_layers" in params:
+        x = _scan_layers(
+            x,
+            params["moe_layers"],
+            _layer_fwd(cfg, mesh, rules, use_moe=True),
+            positions,
+            cfg.remat,
+        )
+    x = rms_norm(x, params["final_norm"])
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed,
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, mesh, rules, "batch", None, "vocab")
+
+
+def _mtp_logits(params, cfg, x_final, tokens, mesh, rules):
+    """DeepSeek-V3 multi-token prediction head (depth 1, simplified: the
+    MTP block sees the trunk's final hidden states shifted one step and the
+    embedding of the next token, then predicts token t+2)."""
+    b, s = tokens.shape
+    emb_next = _embed_lookup(params, cfg, tokens, mesh, rules)  # (B, S, d)
+    h = rms_norm(x_final, params["mtp_norm"]) + emb_next
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    fwd = _layer_fwd(cfg, mesh, rules, use_moe=False)
+    h = fwd(h, params["mtp_layer"], positions)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, unembed,
+                      preferred_element_type=jnp.float32)
+
+
+def loss_fn(
+    params,
+    cfg: TransformerConfig,
+    batch: dict[str, Array],
+    *,
+    mesh: Mesh | None = None,
+    rules: ShardingRules | None = None,
+    mtp_weight: float = 0.1,
+) -> Array:
+    """batch: tokens (B, S), labels (B, S) with -1 = ignore."""
+    rules = rules or ShardingRules()
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = _embed_lookup(params, cfg, tokens, mesh, rules)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if "dense_layers" in params:
+        x = _scan_layers(
+            x, params["dense_layers"],
+            _layer_fwd(cfg, mesh, rules, use_moe=False), positions, cfg.remat,
+        )
+    if "moe_layers" in params:
+        x = _scan_layers(
+            x, params["moe_layers"],
+            _layer_fwd(cfg, mesh, rules, use_moe=True), positions, cfg.remat,
+        )
+    xf = rms_norm(x, params["final_norm"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", xf, unembed,
+                        preferred_element_type=jnp.float32)
+    logits = constrain(logits, mesh, rules, "batch", None, "vocab")
+    loss = softmax_cross_entropy(logits, labels)
+    if cfg.mtp_depth and "mtp_layer" in params:
+        # labels for t+2: shift labels left by one, pad with ignore.
+        mtp_labels = jnp.concatenate(
+            [labels[:, 1:], jnp.full((b, 1), -1, labels.dtype)], axis=1
+        )
+        mtp_logits = _mtp_logits(params, cfg, x, tokens, mesh, rules)
+        loss = loss + mtp_weight * softmax_cross_entropy(mtp_logits, mtp_labels)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def cache_length(cfg: TransformerConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Stacked per-layer caches. GQA: ring (L, B, C, hkv, hd) pairs.
+    MLA: compressed latent (L, B, C, kv_lora) + rope keys (L, B, C, dr)."""
+    dtype = _dtype(cfg)
+    clen = cache_length(cfg, max_len)
+    n_dense = cfg.num_dense_layers_effective()
+    n_moe = cfg.num_moe_layers()
+
+    def stack(n):
+        if cfg.attention == "mla":
+            return {
+                "ckv": jnp.zeros((n, batch, clen, cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((n, batch, clen, cfg.qk_rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros(
+                (n, batch, clen, cfg.num_kv_heads, cfg.head_dim), dtype
+            ),
+            "v": jnp.zeros(
+                (n, batch, clen, cfg.num_kv_heads, cfg.head_dim), dtype
+            ),
+        }
+
+    cache = {}
+    if n_dense:
+        cache["dense"] = stack(n_dense)
+    if n_moe:
+        cache["moe"] = stack(n_moe)
+    return cache
+
+
+def _decode_layer(cfg, mesh, rules, use_moe):
+    act = activation_fn(cfg.activation)
+
+    def f(carry, layer_and_cache):
+        x, pos = carry
+        layer, cache = layer_and_cache
+        hn = rms_norm(x, layer["ln1"])
+        if cfg.attention == "mla":
+            attn_out, ckv, krope = mla_decode(
+                layer["attn"], cfg, hn, cache["ckv"], cache["krope"], pos
+            )
+            new_cache = {"ckv": ckv, "krope": krope}
+        else:
+            attn_out, ck, cv = gqa_decode(
+                layer["attn"], cfg, hn, cache["k"], cache["v"], pos
+            )
+            new_cache = {"k": ck, "v": cv}
+        h = x + attn_out
+        hn2 = rms_norm(h, layer["ln2"])
+        if use_moe:
+            out = h + moe_ffn(layer["moe"], cfg, hn2, act, mesh=mesh)
+        else:
+            out = h + _dense_ffn(layer["ffn"], cfg, hn2)
+        return (out, pos), new_cache
+
+    return f
+
+
+def serve_step(
+    params,
+    cfg: TransformerConfig,
+    cache,
+    tokens: Array,  # (B, 1)
+    pos: Array,  # scalar int32: index of the new token
+    *,
+    mesh: Mesh | None = None,
+    rules: ShardingRules | None = None,
+):
+    """One decode step; returns (logits (B, 1, V), new_cache)."""
+    rules = rules or ShardingRules()
+    x = _embed_lookup(params, cfg, tokens, mesh, rules)
+    new_cache = {}
+    if "dense_layers" in params:
+        (x, _), new_cache["dense"] = jax.lax.scan(
+            _decode_layer(cfg, mesh, rules, use_moe=False),
+            (x, pos),
+            (params["dense_layers"], cache["dense"]),
+        )
+    if "moe_layers" in params:
+        (x, _), new_cache["moe"] = jax.lax.scan(
+            _decode_layer(cfg, mesh, rules, use_moe=True),
+            (x, pos),
+            (params["moe_layers"], cache["moe"]),
+        )
+    x = rms_norm(x, params["final_norm"])
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed,
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, mesh, rules, "batch", None, "vocab"), new_cache
+
+
+def prefill(
+    params,
+    cfg: TransformerConfig,
+    tokens: Array,  # (B, S)
+    max_len: int,
+    *,
+    mesh: Mesh | None = None,
+    rules: ShardingRules | None = None,
+):
+    """Sequential prefill via serve_step (simple reference path for the
+    examples; production prefill would batch this)."""
+    b, s = tokens.shape
+    cache = init_kv_cache(cfg, b, max_len)
+    logits = None
+    for i in range(s):
+        logits, cache = serve_step(
+            params, cfg, cache, tokens[:, i : i + 1],
+            jnp.int32(i), mesh=mesh, rules=rules,
+        )
+    return logits, cache

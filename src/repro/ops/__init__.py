@@ -1,0 +1,43 @@
+"""Irregular-access substrate shared by every model family.
+
+This package is the generalization of the paper's PRAM->GPU guidelines to
+TPU/JAX: segment reductions, packing layouts, edge-index message passing,
+embedding bags, neighbor sampling, and sort-based dispatch ("coalescing at a
+coarse grain").
+"""
+from repro.ops.segment import (
+    segment_sum,
+    segment_max,
+    segment_min,
+    segment_mean,
+    segment_softmax,
+    segment_count,
+)
+from repro.ops.packing import pack_aos, unpack_aos, pack_word64, unpack_word64
+from repro.ops.scatter_gather import gather_messages, scatter_reduce, mpnn_aggregate
+from repro.ops.embedding_bag import embedding_bag
+from repro.ops.sorted_dispatch import sort_by_key, grouped_offsets
+from repro.ops.kiss import KissRng, random_linked_list, random_graph, random_forest
+
+__all__ = [
+    "segment_sum",
+    "segment_max",
+    "segment_min",
+    "segment_mean",
+    "segment_softmax",
+    "segment_count",
+    "pack_aos",
+    "unpack_aos",
+    "pack_word64",
+    "unpack_word64",
+    "gather_messages",
+    "scatter_reduce",
+    "mpnn_aggregate",
+    "embedding_bag",
+    "sort_by_key",
+    "grouped_offsets",
+    "KissRng",
+    "random_linked_list",
+    "random_graph",
+    "random_forest",
+]

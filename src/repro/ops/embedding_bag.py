@@ -1,0 +1,76 @@
+"""EmbeddingBag built from take + segment_sum (JAX has no native one).
+
+The recsys hot path: multi-hot categorical features index huge embedding
+tables. The lookup is exactly the paper's irregular-gather regime; the
+bag-reduce is the concurrent-write phase, resolved by segment reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops.segment import segment_max, segment_mean, segment_sum
+
+Array = jax.Array
+
+
+def embedding_bag(
+    table: Array,
+    indices: Array,
+    bag_ids: Array,
+    num_bags: int,
+    *,
+    mode: str = "sum",
+    weights: Array | None = None,
+    indices_are_sorted: bool = False,
+) -> Array:
+    """Gather ``table[indices]`` and reduce rows sharing ``bag_ids``.
+
+    Args:
+        table: (vocab, dim) embedding table.
+        indices: (nnz,) row indices into the table (flattened multi-hot).
+        bag_ids: (nnz,) which output bag each index belongs to; padding
+            entries should use ``bag_ids >= num_bags`` which XLA scatter
+            drops, keeping the kernel branch-free (guideline G3).
+        num_bags: number of output rows.
+        mode: sum | mean | max.
+        weights: optional (nnz,) per-sample weights (sum mode only).
+    """
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        if mode != "sum":
+            raise ValueError("per-sample weights require mode='sum'")
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return segment_sum(
+            rows, bag_ids, num_bags, indices_are_sorted=indices_are_sorted
+        )
+    if mode == "mean":
+        return segment_mean(
+            rows, bag_ids, num_bags, indices_are_sorted=indices_are_sorted
+        )
+    if mode == "max":
+        out = segment_max(
+            rows, bag_ids, num_bags, indices_are_sorted=indices_are_sorted
+        )
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def multi_field_lookup(
+    tables: list[Array],
+    field_indices: Array,
+) -> Array:
+    """Dense one-index-per-field lookup (xDeepFM's 39 sparse fields).
+
+    Args:
+        tables: list of (vocab_f, dim) tables, one per field.
+        field_indices: (batch, n_fields) int32.
+
+    Returns:
+        (batch, n_fields, dim) stacked field embeddings.
+    """
+    cols = [
+        jnp.take(t, field_indices[:, f], axis=0) for f, t in enumerate(tables)
+    ]
+    return jnp.stack(cols, axis=1)

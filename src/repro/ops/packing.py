@@ -1,0 +1,79 @@
+"""Field packing layouts (paper guideline G5, the 48-bit vs 64-bit study).
+
+The paper packs the per-node (mark, rank) pair into a single 64-bit union so
+each list node costs one memory transaction instead of two. On TPU the
+transaction unit is the DMA'd row, so the same idea becomes a layout choice:
+
+* **SoA** ("48-bit analogue"): separate ``owner[n]`` / ``rank[n]`` arrays.
+  Following a pointer costs two independent HBM gathers.
+* **AoS** ("64-bit analogue"): one ``(n, 2)`` int32 array; a row gather
+  fetches both fields in one 8-byte contiguous access.
+* **word64**: true bit packing into one int64 word (requires x64 mode);
+  closest to the paper's union trick, kept for the packing benchmark.
+
+These helpers are deliberately dtype-strict: the roofline term for the
+gather-dominated kernels is computed directly from these layouts' byte
+counts (benchmarks/table2_packing.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pack_aos(rank: Array, owner: Array) -> Array:
+    """Interleave two int32 fields into an (n, 2) array-of-structs."""
+    if rank.shape != owner.shape:
+        raise ValueError(f"shape mismatch {rank.shape} vs {owner.shape}")
+    return jnp.stack([rank.astype(jnp.int32), owner.astype(jnp.int32)], axis=-1)
+
+
+def unpack_aos(packed: Array) -> tuple[Array, Array]:
+    return packed[..., 0], packed[..., 1]
+
+
+def gather_aos(packed: Array, idx: Array) -> tuple[Array, Array]:
+    """One row gather -> both fields (the single 64-bit transaction)."""
+    row = jnp.take(packed, idx, axis=0)
+    return row[..., 0], row[..., 1]
+
+
+def pack_word64(rank: Array, owner: Array) -> Array:
+    """Pack (rank, owner) into one int64 word: rank in high 32, owner low 32.
+
+    Mirrors the paper's 64-bit union. Requires ``jax_enable_x64``; callers
+    that run in default 32-bit mode should use the AoS layout instead.
+    """
+    if jnp.int64 != jnp.result_type(jnp.int64):  # pragma: no cover - env guard
+        raise RuntimeError("pack_word64 requires jax_enable_x64")
+    r = rank.astype(jnp.uint64)
+    o = owner.astype(jnp.uint32).astype(jnp.uint64)
+    return ((r << 32) | o).astype(jnp.int64)
+
+
+def unpack_word64(packed: Array) -> tuple[Array, Array]:
+    u = packed.astype(jnp.uint64)
+    rank = (u >> 32).astype(jnp.int32)
+    owner = (u & jnp.uint64(0xFFFFFFFF)).astype(jnp.int32)
+    return rank, owner
+
+
+def bytes_per_node(pack_mode: str) -> dict[str, int]:
+    """Analytic per-node traffic of one RS3 walk step (paper section 3.3).
+
+    Returns bytes moved per list node per iteration for the sub-list walking
+    kernel, used by the Table-2/Fig-3 reproduction to predict the inflection
+    ordering between layouts.
+    """
+    if pack_mode == "soa":
+        # read succ(4) + read owner(4) + write owner(4) + write rank(4)
+        return {"read": 8, "write": 8}
+    if pack_mode == "aos":
+        # read succ(4) + row read (8) + row write (8)
+        return {"read": 12, "write": 8}
+    if pack_mode == "word64":
+        # read succ(4) + word read (8) + word write (8)
+        return {"read": 12, "write": 8}
+    raise ValueError(f"unknown pack_mode {pack_mode!r}")

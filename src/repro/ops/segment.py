@@ -1,0 +1,151 @@
+"""Segment reductions: the TPU-side primitive for PRAM scatter phases.
+
+The paper's CRCW concurrent-write phases (hooking in Shiloach-Vishkin,
+ownership marking in random-splitter list ranking) become deterministic
+reduce-by-key operations here. ``jax.ops.segment_*`` lowers to XLA scatter
+with a combiner, which is the TPU analogue of the GPU memory-partition
+arbiters resolving concurrent writes (paper section 2.2) -- except the
+resolution is a deterministic min/max/sum instead of "arbitrary".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def segment_sum(
+    data: Array,
+    segment_ids: Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+
+
+def segment_max(
+    data: Array,
+    segment_ids: Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    return jax.ops.segment_max(
+        data, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+
+
+def segment_min(
+    data: Array,
+    segment_ids: Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    return jax.ops.segment_min(
+        data, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+
+
+def segment_count(segment_ids: Array, num_segments: int) -> Array:
+    """Number of elements per segment (degree counting)."""
+    return jax.ops.segment_sum(
+        jnp.ones(segment_ids.shape, jnp.int32), segment_ids, num_segments
+    )
+
+
+def segment_mean(
+    data: Array,
+    segment_ids: Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    total = segment_sum(
+        data, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+    count = segment_count(segment_ids, num_segments)
+    count = jnp.maximum(count, 1).astype(total.dtype)
+    return total / count.reshape(count.shape + (1,) * (total.ndim - 1))
+
+
+def segment_softmax(
+    logits: Array,
+    segment_ids: Array,
+    num_segments: int,
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    """Numerically stable softmax within each segment (GAT edge softmax).
+
+    Branch-free masking per paper guideline G3: empty segments and padding
+    rows are handled through where/maximum arithmetic, never control flow.
+    """
+    seg_max = segment_max(
+        logits, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+    # Empty segments produce -inf maxima; neutralize so gather stays finite.
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    seg_den = segment_sum(
+        expd, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+    seg_den = jnp.maximum(seg_den, jnp.finfo(expd.dtype).tiny)
+    return expd / seg_den[segment_ids]
+
+
+# ---------------------------------------------------------------------------
+# Edge-parallel (sharded) variants: inside shard_map blocks where edges are
+# sharded and node arrays are replicated, partial per-shard reductions are
+# combined with psum/pmax over the edge axes. This is the paper's
+# concurrent-write arbitration lifted to the collective level.
+# ---------------------------------------------------------------------------
+
+
+def segment_sum_dist(
+    data: Array,
+    segment_ids: Array,
+    num_segments: int,
+    axes: tuple[str, ...] = (),
+    *,
+    indices_are_sorted: bool = False,
+) -> Array:
+    out = segment_sum(
+        data, segment_ids, num_segments, indices_are_sorted=indices_are_sorted
+    )
+    return jax.lax.psum(out, axes) if axes else out
+
+
+def segment_max_dist(
+    data: Array,
+    segment_ids: Array,
+    num_segments: int,
+    axes: tuple[str, ...] = (),
+) -> Array:
+    out = segment_max(data, segment_ids, num_segments)
+    return jax.lax.pmax(out, axes) if axes else out
+
+
+def segment_softmax_dist(
+    logits: Array,
+    segment_ids: Array,
+    num_segments: int,
+    axes: tuple[str, ...] = (),
+) -> tuple[Array, Array]:
+    """Edge-sharded segment softmax.
+
+    Returns (numerator_per_edge, denominator_per_segment); the caller
+    divides after aggregating weighted messages so only two collectives
+    (pmax + psum) are needed per attention layer.
+    """
+    seg_max = segment_max_dist(logits, segment_ids, num_segments, axes)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    expd = jnp.exp(logits - seg_max[segment_ids])
+    seg_den = segment_sum_dist(expd, segment_ids, num_segments, axes)
+    seg_den = jnp.maximum(seg_den, jnp.finfo(expd.dtype).tiny)
+    return expd, seg_den

@@ -1,0 +1,48 @@
+"""Distributed row gather from a row-sharded table (embedding lookup).
+
+The distributed form of the paper's irregular read: each shard gathers the
+rows it owns (branch-free mask, guideline G3) and a psum combines the
+partials -- the collective-level analogue of the memory-partition arbiters.
+This is written explicitly (shard_map) rather than left to GSPMD so the
+collective schedule is deterministic and visible in the roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Array = jax.Array
+
+
+def sharded_row_gather(
+    table: Array,  # (rows, dim), sharded P(row_axis, None)
+    idx: Array,  # any int shape, sharded batch_spec (or replicated)
+    mesh: Mesh | None,
+    row_axis: str | None = "model",
+    idx_spec: P = P(),
+) -> Array:
+    """Returns table[idx] with shape idx.shape + (dim,)."""
+    if mesh is None or mesh.empty or row_axis not in mesh.axis_names:
+        return jnp.take(table, idx, axis=0)
+    if mesh.shape[row_axis] == 1:
+        return jnp.take(table, idx, axis=0)
+
+    def block(tbl, ids):
+        i = jax.lax.axis_index(row_axis)
+        per = tbl.shape[0]
+        loc = ids.astype(jnp.int32) - i * per
+        ok = jnp.logical_and(loc >= 0, loc < per)
+        vals = jnp.take(tbl, jnp.clip(loc, 0, per - 1), axis=0)
+        vals = jnp.where(ok[..., None], vals, 0)
+        return jax.lax.psum(vals, row_axis)
+
+    parts = tuple(idx_spec)
+    out_spec = P(*(parts + (None,) * (idx.ndim - len(parts)) + (None,)))
+    return jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(row_axis, None), idx_spec),
+        out_specs=out_spec,
+        check_vma=False,
+    )(table, idx)

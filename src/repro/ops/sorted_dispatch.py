@@ -1,0 +1,73 @@
+"""Sort-based grouping: coalescing (guideline G1) at coarse grain.
+
+On a GPU, coalescing happens per half-warp memory transaction. On TPU the
+same economics apply one level up: ragged groups (tokens->experts, edges->
+nodes, bag items->tables) become efficient when physically grouped, because
+then every downstream op is a dense contiguous block instead of a scatter.
+
+This module is used by the MoE dispatch (tokens sorted by expert id before
+the all_to_all) and by the GNN/embedding paths (edges/bags sorted by
+destination/segment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sort_by_key(keys: Array, *values: Array) -> tuple[Array, ...]:
+    """Stable argsort by key; returns (sorted_keys, perm, *sorted_values)."""
+    perm = jnp.argsort(keys, stable=True)
+    return (keys[perm], perm) + tuple(v[perm] for v in values)
+
+
+def grouped_offsets(sorted_keys: Array, num_groups: int) -> tuple[Array, Array]:
+    """Counts and exclusive-prefix offsets per group for sorted keys."""
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(sorted_keys, dtype=jnp.int32), sorted_keys, num_groups
+    )
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )
+    return counts, offsets
+
+
+def position_in_group(keys: Array, num_groups: int) -> Array:
+    """For each element, its 0-based arrival position within its key group.
+
+    Branch-free (guideline G3): computed as rank-within-key via cumulative
+    one-hot sums. Cost O(n * num_groups) flops but fully dense/vectorizable;
+    used for capacity assignment in MoE dispatch where num_groups = experts.
+    """
+    onehot = jax.nn.one_hot(keys, num_groups, dtype=jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.sum(cum * onehot, axis=-1)
+
+
+def take_grouped(
+    values: Array,
+    keys: Array,
+    num_groups: int,
+    capacity: int,
+    *,
+    fill_value=0,
+) -> tuple[Array, Array, Array]:
+    """Pack `values` into a dense (num_groups, capacity, ...) buffer.
+
+    Elements beyond `capacity` in their group are dropped (MoE token
+    dropping / bounded sub-list semantics). Returns (buffer, slot, kept)
+    where slot[i] is the row each element landed in and kept[i] marks
+    non-dropped elements. Scatter uses OOB-drop semantics so the whole
+    routine is branch-free.
+    """
+    pos = position_in_group(keys, num_groups)
+    kept = pos < capacity
+    flat_slot = keys * capacity + pos
+    flat_slot = jnp.where(kept, flat_slot, num_groups * capacity)  # OOB drop
+    buf = jnp.full(
+        (num_groups * capacity,) + values.shape[1:], fill_value, values.dtype
+    )
+    buf = buf.at[flat_slot].set(values, mode="drop")
+    return buf.reshape((num_groups, capacity) + values.shape[1:]), flat_slot, kept

@@ -1,0 +1,4 @@
+"""LM serving engine: continuous-batching decode over the KV-cache API."""
+from repro.serve.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,98 @@
+"""Wave-batched LM serving engine over the transformer KV-cache API.
+
+Batched request scheduling adapted to static JAX shapes: the engine owns a
+fixed (num_slots, max_len) KV cache; up to ``num_slots`` requests are
+admitted per WAVE, prefilled token-by-token through the same jitted
+``serve_step`` used for decode (one compilation total), and the wave
+retires when every member finishes (EOS / token budget). Early-finishing
+slots idle masked -- the branch-free analogue of the paper's lockstep walk:
+all lanes step together, finished lanes burn no semantics.
+
+Per-slot-position continuous batching (vLLM-style slot reuse mid-wave)
+needs a vector-position cache API; recorded in DESIGN.md section Next. The
+wave scheduler is exact: each slot's cache rows only ever contain its own
+request's tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import init_kv_cache, serve_step
+
+Array = jax.Array
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, *, num_slots: int = 4, max_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._step = jax.jit(lambda p, c, t, i: serve_step(p, cfg, c, t, i))
+        self.waves = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _run_wave(self, wave: list[Request]):
+        cache = init_kv_cache(self.cfg, self.num_slots, self.max_len)
+        pending = [list(r.prompt) for r in wave]
+        active = [True] * len(wave)
+        pos = 0
+        while any(active) and pos < self.max_len:
+            tokens = np.zeros((self.num_slots, 1), np.int32)
+            for s, r in enumerate(wave):
+                if pending[s]:
+                    tokens[s, 0] = pending[s][0]
+                elif r.output:
+                    tokens[s, 0] = r.output[-1]
+                else:
+                    tokens[s, 0] = r.prompt[-1]
+            logits, cache = self._step(
+                self.params, cache, jnp.asarray(tokens), jnp.int32(pos)
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            for s, r in enumerate(wave):
+                if not active[s]:
+                    continue
+                if pending[s]:
+                    pending[s].pop(0)
+                    if pending[s]:
+                        continue  # still prefilling; prediction unused
+                tok = int(nxt[s])
+                r.output.append(tok)
+                if (
+                    len(r.output) >= r.max_new_tokens
+                    or (r.eos_id is not None and tok == r.eos_id)
+                    or pos + 2 >= self.max_len
+                ):
+                    r.done = True
+                    active[s] = False
+            pos += 1
+        self.finished.extend(wave)
+        self.waves += 1
+
+    def run(self) -> list[Request]:
+        """Process the whole queue; returns finished requests in order."""
+        while self.queue:
+            wave = self.queue[: self.num_slots]
+            self.queue = self.queue[self.num_slots :]
+            self._run_wave(wave)
+        return self.finished

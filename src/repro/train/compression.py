@@ -1,0 +1,49 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+For bandwidth-bound data-parallel training, gradients are quantized to int8
+with a per-tensor scale before the all-reduce and the quantization error is
+carried into the next step (error feedback keeps SGD/Adam convergence; see
+1-bit Adam / EF-SGD literature). The quantize/dequantize pair is exact
+enough that tests assert convergence parity on a quadratic problem.
+
+Usage: wrap grads between value_and_grad and the optimizer:
+    grads, ef = compress_decompress(grads, ef)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, error_feedback):
+    """Simulated compressed all-reduce: returns (decompressed grads, new EF).
+
+    On a real fleet the int8 payload is what crosses the wire (psum over
+    int32 accumulators); numerically the result equals this local
+    quantize->dequantize, which is what tests validate.
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(one, grads, error_feedback)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

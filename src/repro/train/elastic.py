@@ -1,0 +1,66 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints store full arrays (checkpoint.py), so growing/shrinking the
+fleet is: restore -> device_put with the new mesh's NamedShardings ->
+continue. The only validation needed is divisibility of sharded dims by the
+new axis sizes; we check and fall back to replication per-leaf otherwise
+(with a warning), which is always correct.
+"""
+from __future__ import annotations
+
+import logging
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger("repro.elastic")
+
+
+def _axis_size(mesh: Mesh, dim) -> int:
+    if dim is None:
+        return 1
+    if isinstance(dim, str):
+        return mesh.shape[dim]
+    out = 1
+    for a in dim:
+        out *= mesh.shape[a]
+    return out
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis names absent from mesh; replicate dims that don't divide."""
+    parts = []
+    for i, dim in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if dim is None:
+            parts.append(None)
+            continue
+        names = (dim,) if isinstance(dim, str) else tuple(dim)
+        names = tuple(a for a in names if a in mesh.axis_names)
+        if not names:
+            parts.append(None)
+            continue
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if shape[i] % size:
+            log.warning(
+                "elastic: dim %d of shape %s not divisible by %s=%d; replicating",
+                i, shape, names, size,
+            )
+            parts.append(None)
+        else:
+            parts.append(names if len(names) > 1 else names[0])
+    return P(*parts)
+
+
+def reshard_state(state, spec_tree, mesh: Mesh):
+    """state: numpy/jax pytree; spec_tree: PartitionSpec pytree (same
+    structure). Returns device arrays sharded for `mesh`."""
+
+    def put(x, spec):
+        fitted = fit_spec(spec, tuple(x.shape), mesh)
+        return jax.device_put(x, NamedSharding(mesh, fitted))
+
+    return jax.tree.map(
+        put, state, spec_tree,
+    )

@@ -1,0 +1,173 @@
+"""Fault-tolerant training loop: auto-resume, async checkpoints, straggler
+watchdog, optional gradient compression and microbatch accumulation."""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import compress_decompress, init_error_feedback
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    # straggler watchdog: warn when a step exceeds ema_factor x EMA
+    watchdog_factor: float = 3.0
+    grad_compression: bool = False
+    num_microbatches: int = 1
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: AdamWConfig,
+    *,
+    num_microbatches: int = 1,
+    grad_compression: bool = False,
+):
+    """Build a (params, opt_state, ef, batch) -> (params, opt_state, ef,
+    metrics) step with optional gradient accumulation.
+
+    With num_microbatches > 1, the batch's leading axis is split and grads
+    are accumulated in a lax.scan -- the activation-memory lever that lets
+    the big configs fit (DESIGN.md section 4).
+    """
+
+    def accumulate(params, batch):
+        if num_microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(i, batch):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // num_microbatches),
+                    x.shape[0] // num_microbatches, 0,
+                ),
+                batch,
+            )
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, micro(i, batch))
+            return (
+                loss_acc + loss,
+                jax.tree.map(jnp.add, grad_acc, grads),
+            ), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0), zeros), jnp.arange(num_microbatches)
+        )
+        scale = 1.0 / num_microbatches
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def step(params, opt_state, ef, batch):
+        loss, grads = accumulate(params, batch)
+        if grad_compression:
+            grads, ef = compress_decompress(grads, ef)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, ef, metrics
+
+    return step
+
+
+class StragglerWatchdog:
+    """EMA step-time monitor. On a real fleet this feeds the coordinator's
+    slow-host eviction; here it records and warns (unit-tested logic)."""
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.2):
+        self.factor = factor
+        self.alpha = alpha
+        self.ema: float | None = None
+        self.slow_steps: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        if slow:
+            self.slow_steps.append((step, dt))
+            log.warning("straggler: step %d took %.3fs (ema %.3fs)", step, dt, self.ema)
+        self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
+        return slow
+
+
+def train(
+    params,
+    loss_fn: Callable,
+    data_iter: Iterator[Any],
+    opt_cfg: AdamWConfig,
+    loop_cfg: LoopConfig,
+    *,
+    jit_kwargs: dict | None = None,
+) -> tuple[Any, dict]:
+    """Run the loop; auto-resumes from the newest checkpoint if present."""
+    opt_state = init_opt_state(params, opt_cfg)
+    ef = init_error_feedback(params) if loop_cfg.grad_compression else None
+
+    step_fn = make_train_step(
+        loss_fn,
+        opt_cfg,
+        num_microbatches=loop_cfg.num_microbatches,
+        grad_compression=loop_cfg.grad_compression,
+    )
+    if loop_cfg.grad_compression:
+        jitted = jax.jit(step_fn, **(jit_kwargs or {}))
+    else:
+        jitted = jax.jit(
+            lambda p, o, b: _drop_ef(step_fn, p, o, b), **(jit_kwargs or {})
+        )
+
+    mgr = None
+    start_step = 0
+    if loop_cfg.checkpoint_dir:
+        mgr = CheckpointManager(loop_cfg.checkpoint_dir, keep=loop_cfg.keep_checkpoints)
+        latest = mgr.latest_step()
+        if latest is not None:
+            state = mgr.restore(latest, {"params": params, "opt_state": opt_state})
+            params = jax.tree.map(jnp.asarray, state["params"])
+            opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
+            start_step = latest
+            log.info("resumed from checkpoint step %d", latest)
+
+    watchdog = StragglerWatchdog(loop_cfg.watchdog_factor)
+    history: list[dict] = []
+    for step in range(start_step, loop_cfg.total_steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        if loop_cfg.grad_compression:
+            params, opt_state, ef, metrics = jitted(params, opt_state, ef, batch)
+        else:
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        watchdog.observe(step, dt)
+        if step % loop_cfg.log_every == 0:
+            log.info("step %d loss %.4f (%.3fs)", step, float(metrics["loss"]), dt)
+        history.append({"step": step, "loss": float(metrics["loss"]), "dt": dt})
+        if mgr and (step + 1) % loop_cfg.checkpoint_every == 0:
+            mgr.save(step + 1, {"params": params, "opt_state": opt_state})
+    if mgr:
+        mgr.save(loop_cfg.total_steps, {"params": params, "opt_state": opt_state},
+                 blocking=True)
+    return params, {
+        "history": history,
+        "slow_steps": watchdog.slow_steps,
+        "final_loss": history[-1]["loss"] if history else None,
+    }
+
+
+def _drop_ef(step_fn, p, o, b):
+    p2, o2, _ef, m = step_fn(p, o, None, b)
+    return p2, o2, m

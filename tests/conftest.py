@@ -1,0 +1,23 @@
+import os
+
+# Tests run single-device CPU. The 512-device dry-run sets its own XLA_FLAGS
+# inside launch/dryrun.py; never set it globally here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_succ(n: int, seed: int = 0) -> np.ndarray:
+    """Random linked-list succ[] with head 0 (plain numpy, no KISS)."""
+    r = np.random.default_rng(seed)
+    order = np.concatenate([[0], 1 + r.permutation(n - 1)]) if n > 1 else np.zeros(1, np.int64)
+    succ = np.empty(n, dtype=np.int32)
+    succ[order[:-1]] = order[1:]
+    succ[order[-1]] = order[-1]
+    return succ

@@ -1,0 +1,81 @@
+"""Config registry + dry-run spec construction for all 40 cells (abstract
+only; the compile pass is exercised by launch/dryrun.py on the 512-device
+mesh -- results in EXPERIMENTS.md)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, all_cells, get_arch
+from repro.launch.mesh import make_test_mesh
+
+
+def test_registry_has_all_ten_archs():
+    assert len(ARCH_NAMES) == 10
+    for name in ARCH_NAMES:
+        arch = get_arch(name)
+        assert arch.name == name
+        assert len(arch.shapes()) == 4
+
+
+def test_forty_cells():
+    assert len(all_cells()) == 40
+
+
+def test_long_500k_skips_match_attention_kind():
+    skipped = {
+        name
+        for name in ARCH_NAMES
+        if get_arch(name).skip_reason("long_500k")
+        if get_arch(name).family == "lm"
+    }
+    # all full-attention LMs skip; mixtral (SWA) runs
+    assert skipped == {"gemma-2b", "phi3-mini-3.8b", "qwen3-4b", "deepseek-v3-671b"}
+
+
+@pytest.mark.parametrize("name,shape", all_cells())
+def test_build_spec_abstract(name, shape):
+    """Every cell must produce a well-formed DryRunSpec (shapes, shardings,
+    flop/byte models) on a small test mesh without any compilation."""
+    arch = get_arch(name)
+    if arch.skip_reason(shape):
+        pytest.skip(arch.skip_reason(shape))
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    spec = arch.build(shape, mesh)
+    n_args = len(jax.tree.leaves(spec.args))
+    n_shard = len(jax.tree.leaves(spec.in_shardings, is_leaf=lambda x: x is None))
+    assert n_args > 0
+    assert spec.model_flops_total > 0
+    assert spec.flops_total is None or spec.flops_total >= spec.model_flops_total * 0.5
+    assert spec.hbm_bytes_per_device is None or spec.hbm_bytes_per_device > 0
+
+
+def test_param_spec_divisibility_on_production_shapes():
+    """Every sharded param dim must divide by its mesh axis size on the
+    16x16 production mesh (checked abstractly via axis sizes)."""
+    from repro.configs.lm_family import lm_path_rules
+    from repro.models.transformer import init_params
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for name in ("gemma-2b", "phi3-mini-3.8b", "qwen3-4b", "deepseek-v3-671b",
+                 "mixtral-8x7b"):
+        cfg = get_arch(name).config
+        params_abs = jax.eval_shape(
+            lambda c=cfg: init_params(jax.random.PRNGKey(0), c)
+        )
+        specs = lm_path_rules(cfg, FakeMesh()).spec_tree(params_abs)
+
+        def check(leaf, spec):
+            for dim, part in zip(leaf.shape, tuple(spec)):
+                if part is None:
+                    continue
+                axes = (part,) if isinstance(part, str) else part
+                size = int(np.prod([FakeMesh.shape[a] for a in axes]))
+                assert dim % size == 0, (name, leaf.shape, spec)
+
+        jax.tree.map(
+            check, params_abs, specs,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict),
+        )

@@ -1,0 +1,55 @@
+"""Shiloach-Vishkin + label propagation vs union-find oracle; the paper's
+round bound; graph-family behaviour (Figures 4-6 invariants)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    label_propagation,
+    num_components,
+    shiloach_vishkin,
+    sv_round_bound,
+)
+from repro.core.serial import canonicalize_labels, serial_connected_components
+from repro.ops.kiss import list_graph, random_graph, tree_graph
+
+
+def _check(edges: np.ndarray, n: int):
+    ref = canonicalize_labels(serial_connected_components(edges, n))
+    lab, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    np.testing.assert_array_equal(canonicalize_labels(np.asarray(lab)), ref)
+    assert int(rounds) <= sv_round_bound(n)
+    lab2, _ = label_propagation(edges[:, 0], edges[:, 1], n)
+    np.testing.assert_array_equal(canonicalize_labels(np.asarray(lab2)), ref)
+    return int(rounds)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 120), st.integers(1, 400), st.integers(0, 10_000))
+def test_random_edge_lists(n, m, seed):
+    r = np.random.default_rng(seed)
+    edges = r.integers(0, n, size=(m, 2)).astype(np.int32)
+    _check(edges, n)
+
+
+def test_paper_graph_families():
+    rounds = {}
+    n = 2000
+    rounds["list"] = _check(list_graph(n, 4, seed=1), n)
+    rounds["tree"] = _check(tree_graph(n, 3, seed=2), n)
+    rounds["random"] = _check(random_graph(n, 0.01, seed=3), n)
+    # paper section 4: random graphs converge in fewer rounds than
+    # trees/lists (smaller diameter after hooking)
+    assert rounds["random"] <= rounds["tree"]
+    assert rounds["random"] <= rounds["list"]
+
+
+def test_singleton_and_empty_edges():
+    edges = np.zeros((1, 2), np.int32)  # single self-loop
+    lab, _ = shiloach_vishkin(edges[:, 0], edges[:, 1], 5)
+    assert num_components(lab) == 5
+
+
+def test_component_counting():
+    edges = np.array([[0, 1], [2, 3], [3, 4]], np.int32)
+    lab, _ = shiloach_vishkin(edges[:, 0], edges[:, 1], 6)
+    assert num_components(lab) == 3  # {0,1}, {2,3,4}, {5}

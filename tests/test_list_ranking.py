@@ -1,0 +1,96 @@
+"""List-ranking correctness: hypothesis property tests vs the serial oracle,
+all pack modes, splitter statistics (paper Table 3 invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_succ
+from repro.core import (
+    even_splitters,
+    max_splitters_for_linear_work,
+    random_splitter_rank,
+    select_splitters,
+    wylie_rank,
+)
+from repro.core.serial import serial_list_rank
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 10_000))
+def test_wylie_matches_serial(n, seed):
+    succ = random_succ(n, seed)
+    ref = serial_list_rank(succ)
+    for pm in ("soa", "aos"):
+        got = np.asarray(wylie_rank(succ, pack_mode=pm))
+        np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 500),
+    st.integers(0, 10_000),
+    st.sampled_from(["soa", "aos"]),
+    st.integers(1, 64),
+)
+def test_random_splitter_matches_serial(n, seed, pack_mode, p):
+    p = min(p, n)
+    succ = random_succ(n, seed)
+    ref = serial_list_rank(succ)
+    got = np.asarray(
+        random_splitter_rank(succ, p, seed=seed, pack_mode=pack_mode)
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_explicit_splitters_and_stats():
+    n, p = 5000, 64
+    succ = random_succ(n, 3)
+    ref = serial_list_rank(succ)
+    rank, stats = random_splitter_rank(succ, p, seed=1, with_stats=True)
+    np.testing.assert_array_equal(np.asarray(rank), ref)
+    # every node is owned by exactly one sub-list: lengths partition n
+    assert stats.sublist_lengths.sum() == n
+    # trip count == longest walk; terminal lanes count one fewer step than
+    # their recorded length (the exit increment), hence the +-1 window
+    assert abs(stats.walk_steps - int(stats.sublist_lengths.max())) <= 1
+    assert stats.expected_mean == pytest.approx(n / p)
+
+
+def test_even_splitters_have_uniform_sublists():
+    n, p = 4096, 32
+    succ = random_succ(n, 9)
+    spl = even_splitters(succ, p)
+    rank, stats = random_splitter_rank(
+        succ, splitters=spl, with_stats=True
+    )
+    np.testing.assert_array_equal(np.asarray(rank), serial_list_rank(succ))
+    # paper Table 3: perfect splitters -> equal length sub-lists (n/p +- 1)
+    assert stats.sublist_lengths.max() - stats.sublist_lengths.min() <= 1
+
+
+def test_select_splitters_distinct_and_covering():
+    spl = select_splitters(10_000, 128, seed=5)
+    assert len(np.unique(spl)) == 128
+    assert spl[0] == 0  # head always included
+
+
+def test_linear_work_bound():
+    # paper: p log p <= n keeps the total work O(n)
+    for n in (1_000_000, 10_000_000):
+        p = max_splitters_for_linear_work(n)
+        assert p * np.log2(p) <= n
+
+
+def test_wylie_packed_equals_soa_large():
+    succ = random_succ(20_000, 11)
+    a = np.asarray(wylie_rank(succ, pack_mode="soa"))
+    b = np.asarray(wylie_rank(succ, pack_mode="aos"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_kiss_generated_list_is_valid():
+    from repro.ops.kiss import random_linked_list
+
+    succ = random_linked_list(1000, seed=7)
+    ref = serial_list_rank(succ)  # raises if the chain doesn't cover n
+    assert ref.min() == 0 and ref.max() == 999

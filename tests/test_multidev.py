@@ -1,0 +1,43 @@
+"""Multi-device behaviour (8 fake CPU devices) via fresh subprocesses --
+the pytest process is pinned to 1 device and jax locks the count at import."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "multidev_scripts.py")
+
+
+def _run(name: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]
+    )
+    proc = subprocess.run(
+        [sys.executable, _SCRIPT, name],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MULTIDEV_OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_moe_expert_parallel_schedules():
+    _run("moe_ep")
+
+
+@pytest.mark.slow
+def test_pipeline_parallelism_matches_sequential():
+    _run("pipeline_pp")
+
+
+@pytest.mark.slow
+def test_sharded_embedding_lookup():
+    _run("sharded_lookup")
+
+
+@pytest.mark.slow
+def test_gnn_edge_parallel_loss_matches():
+    _run("gnn_edge_parallel")

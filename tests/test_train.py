@@ -1,0 +1,172 @@
+"""Training substrate: optimizer, compression, checkpointing, elastic
+resharding, straggler watchdog, microbatch accumulation, full loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (
+    compress_decompress,
+    init_error_feedback,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.train.loop import LoopConfig, StragglerWatchdog, make_train_step, train
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def _quadratic_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 4)), jnp.float32)
+
+    def loss_fn(params, batch=None):
+        return jnp.mean((params["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros((8, 4))}
+    return params, loss_fn, target
+
+
+def test_adamw_converges_on_quadratic():
+    params, loss_fn, target = _quadratic_problem()
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1)
+    opt = init_opt_state(params, cfg)
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        params, opt, m = adamw_update(g, opt, params, cfg)
+    assert float(loss_fn(params)) < 1e-2
+    assert float(m["grad_norm"]) < 1.0
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0, warmup_steps=1)
+    opt = init_opt_state(params, cfg)
+    huge = {"w": jnp.full(3, 1e9)}
+    p2, _, m = adamw_update(huge, opt, params, cfg)
+    assert float(m["grad_norm"]) > 1e8
+    assert np.abs(np.asarray(p2["w"])).max() < 10.0
+
+
+def test_int8_quantization_roundtrip_error():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x)).max()
+    assert err <= float(s) * 0.51 + 1e-9  # half-ulp of the int8 grid
+
+
+def test_error_feedback_compression_converges():
+    params, loss_fn, target = _quadratic_problem()
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1)
+    opt = init_opt_state(params, cfg)
+    ef = init_error_feedback(params)
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        g, ef = compress_decompress(g, ef)
+        params, opt, _ = adamw_update(g, opt, params, cfg)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    r = np.random.default_rng(2)
+    x = jnp.asarray(r.normal(size=(8, 3)), jnp.float32)
+    y = jnp.asarray(r.normal(size=(8,)), jnp.float32)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params = {"w": jnp.zeros(3)}
+    opt_cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=1)
+    batch = {"x": x, "y": y}
+    full = make_train_step(loss_fn, opt_cfg, num_microbatches=1)
+    micro = make_train_step(loss_fn, opt_cfg, num_microbatches=4)
+    opt = init_opt_state(params, opt_cfg)
+    p1, _, _, m1 = full(params, opt, None, batch)
+    p2, _, _, m2 = micro(params, opt, None, batch)
+    # microbatch losses average to the full-batch mean for equal-size chunks
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=1e-4)
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3)},
+        "opt_state": {"step": jnp.int32(7), "m": {"w": jnp.ones((2, 3))}},
+    }
+    for step in (10, 20, 30):
+        mgr.save(step, state, blocking=True)
+    assert mgr.list_steps() == [20, 30]  # keep=2 GC'd step 10
+    restored = mgr.restore(30, state)
+    np.testing.assert_array_equal(
+        restored["params"]["w"], np.asarray(state["params"]["w"])
+    )
+    assert int(restored["opt_state"]["step"]) == 7
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"params": {"w": jnp.zeros((2, 2))}}, blocking=True)
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(1, {"params": {"w": jnp.zeros((3, 3))}})
+
+
+def test_train_loop_resume_after_preemption(tmp_path):
+    """Simulated preemption: run 6 steps with checkpoint_every=3, 'crash',
+    restart -- the loop must resume from step 6, not step 0."""
+    params, loss_fn, _ = _quadratic_problem()
+    data = iter(lambda: {"dummy": jnp.zeros(())}, None)
+    loop_cfg = LoopConfig(
+        total_steps=6, checkpoint_every=3, checkpoint_dir=str(tmp_path),
+        log_every=100,
+    )
+    opt_cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1)
+    _, out1 = train(dict(params), lambda p, b: loss_fn(p), data, opt_cfg, loop_cfg)
+    assert len(out1["history"]) == 6
+    # restart: should resume at 6 and do nothing more (total_steps reached)
+    loop_cfg2 = LoopConfig(
+        total_steps=8, checkpoint_every=3, checkpoint_dir=str(tmp_path),
+        log_every=100,
+    )
+    _, out2 = train(dict(params), lambda p, b: loss_fn(p), data, opt_cfg, loop_cfg2)
+    assert out2["history"][0]["step"] == 6  # resumed, not restarted
+    assert len(out2["history"]) == 2
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    wd = StragglerWatchdog(factor=3.0)
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert wd.observe(10, 1.0)  # 10x the EMA -> flagged
+    assert wd.slow_steps and wd.slow_steps[0][0] == 10
+    assert not wd.observe(11, 0.12)
+
+
+def test_elastic_fit_spec_drops_and_replicates():
+    from types import SimpleNamespace
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train.elastic import fit_spec
+
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 2, "model": 4})
+    # axis missing from mesh -> dropped; non-divisible dim -> replicated
+    assert fit_spec(P("pod", "model"), (4, 8), mesh) == P(None, "model")
+    assert fit_spec(P("model"), (7,), mesh) == P(None)
+    assert fit_spec(P(("data", "model")), (16,), mesh) == P(("data", "model"))
+
+
+def test_elastic_reshard_roundtrip():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_test_mesh
+    from repro.train.elastic import reshard_state
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    state = {"w": np.arange(16.0).reshape(4, 4)}
+    specs = {"w": P("model", None)}
+    out = reshard_state(state, specs, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), state["w"])

@@ -1,0 +1,118 @@
+"""Per-arch smoke tests (reduced configs) + decode/dispatch equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.models.transformer import (
+    forward,
+    init_kv_cache,
+    init_params,
+    loss_fn,
+    serve_step,
+)
+from repro.models.transformer.moe import init_moe_params, moe_ffn_local
+
+LM_ARCHS = [
+    "gemma-2b",
+    "phi3-mini-3.8b",
+    "qwen3-4b",
+    "deepseek-v3-671b",
+    "mixtral-8x7b",
+]
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_smoke_forward_and_train_step(name):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    logits = forward(params, cfg, toks)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    batch = {"tokens": toks, "labels": toks}
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_smoke_decode_matches_forward(name):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    if cfg.moe is not None:  # avoid capacity drops in the equivalence test
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    ref = forward(params, cfg, toks)
+    cache = init_kv_cache(cfg, 2, 12)
+    step = jax.jit(lambda p, c, t, i: serve_step(p, cfg, c, t, i))
+    for i in range(12):
+        logits, cache = step(params, cache, toks[:, i : i + 1], jnp.int32(i))
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(ref[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_swa_ring_buffer_cache_is_window_sized():
+    cfg = get_arch("mixtral-8x7b").smoke_config
+    cache = init_kv_cache(cfg, 2, 100)
+    assert cache["moe"]["k"].shape[2] == cfg.sliding_window  # ring, not 100
+
+
+def test_moe_sorted_vs_unsorted_dispatch_identical():
+    cfg = get_arch("mixtral-8x7b").smoke_config
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    )
+    p = init_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    a = moe_ffn_local(p, cfg, x, jax.nn.silu)
+    cfg_u = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="unsorted")
+    )
+    b = moe_ffn_local(p, cfg_u, x, jax.nn.silu)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.0 some tokens drop; output must stay finite
+    and the residual path preserves them (branch-free drop semantics)."""
+    cfg = get_arch("deepseek-v3-671b").smoke_config
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0)
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab_size)
+    logits = forward(params, cfg, toks)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_param_count_formulas_match_init():
+    for name in LM_ARCHS:
+        arch = get_arch(name)
+        cfg = arch.smoke_config
+        if cfg.mtp_depth:  # formula covers trunk only
+            cfg = dataclasses.replace(cfg, mtp_depth=0)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(x.size) for x in jax.tree.leaves(params))
+        # analytic count ignores norms (tiny); allow 2%
+        expected = cfg.total_params()
+        assert abs(actual - expected) / expected < 0.02, name
+
+
+def test_full_config_param_counts():
+    """Published parameter counts (sanity for the roofline's N)."""
+    ds = get_arch("deepseek-v3-671b").config
+    assert 6.5e11 < ds.total_params() < 7.0e11
+    assert 3.3e10 < ds.active_params() < 4.0e10
+    mx = get_arch("mixtral-8x7b").config
+    assert 4.4e10 < mx.total_params() < 5.0e10
+    g = get_arch("gemma-2b").config
+    assert 2.0e9 < g.total_params() < 3.2e9

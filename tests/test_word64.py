@@ -1,0 +1,48 @@
+"""word64 packing (the paper's literal 64-bit union) needs jax x64 mode,
+which is process-global -- test in a fresh subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.ops.packing import pack_word64, unpack_word64
+
+    r = np.random.default_rng(0)
+    rank = jnp.asarray(r.integers(0, 2**31 - 1, 1000), jnp.int32)
+    owner = jnp.asarray(r.integers(0, 2**31 - 1, 1000), jnp.int32)
+    w = pack_word64(rank, owner)
+    assert w.dtype == jnp.int64
+    r2, o2 = unpack_word64(w)
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(rank))
+    np.testing.assert_array_equal(np.asarray(o2), np.asarray(owner))
+    # one gather of the packed word == two gathers of the halves
+    idx = jnp.asarray(r.integers(0, 1000, 256), jnp.int32)
+    ra, oa = unpack_word64(jnp.take(w, idx))
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rank)[np.asarray(idx)])
+    np.testing.assert_array_equal(np.asarray(oa), np.asarray(owner)[np.asarray(idx)])
+    print("WORD64_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_word64_roundtrip_x64_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        timeout=300, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "WORD64_OK" in proc.stdout

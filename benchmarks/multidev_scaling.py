@@ -1,0 +1,92 @@
+"""Sharded graph engine scaling: runtime + per-round exchange volume vs
+device count, for connected components and random-splitter list ranking.
+
+Run standalone (forces 8 fake CPU host devices; must own the jax import):
+
+    PYTHONPATH=src:. python benchmarks/multidev_scaling.py
+
+or via benchmarks/run.py, where it reports whatever device count that
+process already has. CSV columns: name,us_per_call,derived -- derived
+holds rounds and the exchange-volume model (KiB sent per device)."""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":  # standalone: claim fake devices pre-jax-import
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run(n: int | None = None) -> list[str]:
+    import jax
+
+    from benchmarks.common import SCALE, emit, time_fn
+    from repro.core import random_splitter_rank, shiloach_vishkin
+    from repro.core.list_ranking import select_splitters
+    from repro.data.graphs import random_succ
+    from repro.distributed.graph import (
+        cc_exchange_words_per_round,
+        graph_mesh,
+        rank_exchange_words,
+        sharded_random_splitter_rank,
+        sharded_shiloach_vishkin,
+    )
+    from repro.ops.kiss import random_graph
+
+    n = n or int(20_000 * SCALE)
+    edges = random_graph(n, 4.0 / n, seed=1)
+    succ = random_succ(n, seed=0)
+    p = min(512, n)
+    spl = select_splitters(n, p, seed=0)
+
+    lines = []
+    ndev = jax.device_count()
+    counts = [d for d in (1, 2, 4, 8) if d <= ndev]
+
+    # single-device baselines
+    t = time_fn(lambda: shiloach_vishkin(edges[:, 0], edges[:, 1], n)[0])
+    _, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    lines.append(emit("cc_single", t * 1e6, f"rounds={int(rounds)};exKiB=0"))
+    t = time_fn(lambda: random_splitter_rank(succ, splitters=spl))
+    lines.append(emit("rank_single", t * 1e6, "exKiB=0"))
+
+    for d in counts:
+        mesh = graph_mesh(d)
+        t = time_fn(
+            lambda m=mesh: sharded_shiloach_vishkin(
+                edges[:, 0], edges[:, 1], n, mesh=m
+            )[0]
+        )
+        _, rounds = sharded_shiloach_vishkin(edges[:, 0], edges[:, 1], n, mesh=mesh)
+        ex_kib = cc_exchange_words_per_round(n) * 4 / 1024
+        lines.append(
+            emit(
+                f"cc_sharded_dev{d}",
+                t * 1e6,
+                f"rounds={int(rounds)};exKiB/round={ex_kib:.1f};"
+                f"edges/dev={2 * len(edges) // d}",
+            )
+        )
+        t = time_fn(
+            lambda m=mesh: sharded_random_splitter_rank(
+                succ, splitters=spl, mesh=m
+            )
+        )
+        ex_kib = rank_exchange_words(n, p, d) * 4 / 1024
+        lines.append(
+            emit(
+                f"rank_sharded_dev{d}",
+                t * 1e6,
+                f"exKiB={ex_kib:.1f};lanes/dev={-(-p // d)}",
+            )
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -13,6 +13,7 @@ def main() -> None:
         fig5_parallelism,
         fig6_rounds,
         moe_dispatch,
+        multidev_scaling,
         roofline_table,
         table2_packing,
         table3_splitters,
@@ -28,6 +29,9 @@ def main() -> None:
         ("fig6_rounds", fig6_rounds.run),
         ("moe_dispatch", moe_dispatch.run),
         ("roofline_table", roofline_table.run),
+        # reports this process's device count; run standalone for the
+        # 8-fake-device scaling table (see module docstring)
+        ("multidev_scaling", multidev_scaling.run),
     ]
     print("name,us_per_call,derived")
     failures = []

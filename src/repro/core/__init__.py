@@ -7,7 +7,7 @@ from repro.core.list_ranking import (
     max_splitters_for_linear_work,
     SplitterStats,
 )
-from repro.core.connected_components import (
+from repro.core.components import (
     shiloach_vishkin,
     label_propagation,
     sv_round_bound,
@@ -21,7 +21,58 @@ from repro.core.pram import (
     lockstep_walk,
 )
 
+
+def connected_components(src, dst, num_nodes, *, max_rounds=None, mesh=None):
+    """Connected components with automatic engine dispatch.
+
+    Routes to the edge-partitioned multi-device engine
+    (``repro.distributed.graph``) when a mesh is given or more than one
+    device is visible; otherwise runs the single-device kernel. Both
+    paths return identical (labels, rounds).
+    """
+    import jax
+
+    if mesh is not None or jax.device_count() > 1:
+        from repro.distributed.graph import sharded_shiloach_vishkin
+
+        return sharded_shiloach_vishkin(
+            src, dst, num_nodes, mesh=mesh, max_rounds=max_rounds
+        )
+    return shiloach_vishkin(src, dst, num_nodes, max_rounds=max_rounds)
+
+
+_SINGLE_ENGINE_KW = frozenset({"pack_mode", "kernel_impl"})
+
+
+def list_rank(succ, num_splitters=None, *, mesh=None, **kwargs):
+    """List ranking with automatic engine dispatch (see
+    ``connected_components``).
+
+    ``pack_mode`` / ``kernel_impl`` are single-device tuning knobs: when
+    given (without an explicit mesh) the single-device engine runs
+    regardless of device count, so the same call behaves identically on
+    any machine; combining them WITH a mesh raises.
+    """
+    import jax
+
+    single_only = _SINGLE_ENGINE_KW & kwargs.keys()
+    if mesh is not None or (jax.device_count() > 1 and not single_only):
+        if single_only:
+            raise ValueError(
+                f"{sorted(single_only)} are single-device options; drop "
+                "them or drop mesh="
+            )
+        from repro.distributed.graph import sharded_random_splitter_rank
+
+        return sharded_random_splitter_rank(
+            succ, num_splitters, mesh=mesh, **kwargs
+        )
+    return random_splitter_rank(succ, num_splitters, **kwargs)
+
+
 __all__ = [
+    "connected_components",
+    "list_rank",
     "wylie_rank",
     "random_splitter_rank",
     "select_splitters",

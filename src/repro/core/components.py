@@ -35,19 +35,26 @@ def sv_round_bound(n: int) -> int:
     return int(math.floor(math.log(max(n, 2)) / math.log(1.5))) + 2
 
 
-@partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))
-def shiloach_vishkin(
-    src: Array, dst: Array, num_nodes: int, *, max_rounds: int | None = None
+def sv_run(
+    a: Array,
+    b: Array,
+    n: int,
+    bound: int,
+    merge_labels=None,
+    merge_stamps=None,
 ) -> tuple[Array, Array]:
-    """Connected components. Edges are treated as undirected (both
-    orientations are processed, matching the paper's 2m edge walk).
+    """The SV0..SV5 round loop over edge arrays (a, b).
 
-    Returns (labels, rounds). labels[i] is the component root id.
+    ``merge_labels`` / ``merge_stamps`` are cross-replica reductions
+    applied right after each min-scatter phase; identity on a single
+    device, pmin/pmax in the sharded engine. Keeping the round body in
+    ONE place is what guarantees the two engines stay bit-identical --
+    a min-scatter distributes over edge-shard unions, so inserting the
+    merges at these two points changes who walks each edge and nothing
+    else.
     """
-    n = num_nodes
-    bound = max_rounds if max_rounds is not None else sv_round_bound(n)
-    a = jnp.concatenate([src, dst]).astype(jnp.int32)
-    b = jnp.concatenate([dst, src]).astype(jnp.int32)
+    ml = merge_labels if merge_labels is not None else (lambda d: d)
+    mq = merge_stamps if merge_stamps is not None else (lambda q: q)
 
     # SV0: D(0)[j] = j, Q[j] = 0
     D0 = jnp.arange(n, dtype=jnp.int32)
@@ -70,6 +77,8 @@ def shiloach_vishkin(
         tgt2 = jnp.where(cond2, Da, n)
         D2 = D1.at[tgt2].min(jnp.where(cond2, Db, n), mode="drop")
         Q = Q.at[jnp.where(cond2, Db, n)].set(s, mode="drop")
+        D2 = ml(D2)
+        Q = mq(Q)
 
         # SV3: hook stagnant roots (no activity this round) onto any
         # neighboring tree, breaking label-order ties via min-CRCW.
@@ -79,6 +88,7 @@ def shiloach_vishkin(
         cond3 = stagnant & root_a & (Da3 != Db3)
         tgt3 = jnp.where(cond3, Da3, n)
         D3 = D2.at[tgt3].min(jnp.where(cond3, Db3, n), mode="drop")
+        D3 = ml(D3)
 
         # SV4: short-cut again.
         D4 = D3[D3]
@@ -100,6 +110,22 @@ def shiloach_vishkin(
     comp_iters = max(1, math.ceil(math.log2(max(n, 2))))
     D = jax.lax.fori_loop(0, comp_iters, lambda _, d: d[d], D)
     return D, s - 1
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))
+def shiloach_vishkin(
+    src: Array, dst: Array, num_nodes: int, *, max_rounds: int | None = None
+) -> tuple[Array, Array]:
+    """Connected components. Edges are treated as undirected (both
+    orientations are processed, matching the paper's 2m edge walk).
+
+    Returns (labels, rounds). labels[i] is the component root id.
+    """
+    n = num_nodes
+    bound = max_rounds if max_rounds is not None else sv_round_bound(n)
+    a = jnp.concatenate([src, dst]).astype(jnp.int32)
+    b = jnp.concatenate([dst, src]).astype(jnp.int32)
+    return sv_run(a, b, n, bound)
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))

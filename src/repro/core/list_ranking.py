@@ -153,6 +153,36 @@ def _splitter_list_rank(w_adj: Array, spsucc: Array, iters: int) -> Array:
     return r + w_adj[nxt]
 
 
+def aos_walk_fns(succ: Array, is_stop: Array, lanes: Array, valid=None):
+    """RS3 active/step functions for the AoS store.
+
+    Shared by the single-device core and the sharded engine (which
+    passes offset global lane ids plus a ``valid`` mask for padded
+    lanes) -- one copy of the walk predicate and scatter keeps the two
+    engines bit-identical by construction.
+    """
+    n = succ.shape[0]
+
+    def active_fn(st):
+        act = jnp.logical_and(~is_stop[st["nxt"]], st["nxt"] != st["cur"])
+        return act if valid is None else jnp.logical_and(valid, act)
+
+    def step_fn(st, active):
+        (packed,) = st["store"]
+        nxt, cur, dist = st["nxt"], st["cur"], st["dist"]
+        tgt = jnp.where(active, nxt, n)  # OOB rows are dropped (branch-free)
+        rows = jnp.stack([dist, lanes], axis=-1)
+        packed = packed.at[tgt].set(rows, mode="drop")
+        return dict(
+            store=(packed,),
+            cur=jnp.where(active, nxt, cur),
+            nxt=jnp.where(active, succ[nxt], nxt),
+            dist=dist + active.astype(jnp.int32),
+        )
+
+    return active_fn, step_fn
+
+
 @partial(jax.jit, static_argnames=("pack_mode", "max_steps", "kernel_impl"))
 def _random_splitter_core(
     succ: Array,
@@ -192,30 +222,26 @@ def _random_splitter_core(
         dist=jnp.ones((p,), jnp.int32),
     )
 
-    def active_fn(st):
-        return jnp.logical_and(~is_stop[st["nxt"]], st["nxt"] != st["cur"])
+    if pack_mode == "soa":
 
-    def step_fn(st, active):
-        store = st["store"]
-        nxt, cur, dist = st["nxt"], st["cur"], st["dist"]
-        tgt = jnp.where(active, nxt, n)  # OOB rows are dropped (branch-free)
-        if pack_mode == "soa":
-            owner, local = store
+        def active_fn(st):
+            return jnp.logical_and(~is_stop[st["nxt"]], st["nxt"] != st["cur"])
+
+        def step_fn(st, active):
+            owner, local = st["store"]
+            nxt, cur, dist = st["nxt"], st["cur"], st["dist"]
+            tgt = jnp.where(active, nxt, n)  # OOB rows dropped (branch-free)
             owner = owner.at[tgt].set(lanes, mode="drop")
             local = local.at[tgt].set(dist, mode="drop")
-            store = (owner, local)
-        else:
-            (packed,) = store
-            rows = jnp.stack([dist, lanes], axis=-1)
-            packed = packed.at[tgt].set(rows, mode="drop")
-            store = (packed,)
-        nxt_step = succ[nxt]
-        return dict(
-            store=store,
-            cur=jnp.where(active, nxt, cur),
-            nxt=jnp.where(active, nxt_step, nxt),
-            dist=dist + active.astype(jnp.int32),
-        )
+            return dict(
+                store=(owner, local),
+                cur=jnp.where(active, nxt, cur),
+                nxt=jnp.where(active, succ[nxt], nxt),
+                dist=dist + active.astype(jnp.int32),
+            )
+
+    else:
+        active_fn, step_fn = aos_walk_fns(succ, is_stop, lanes)
 
     final, steps = lockstep_walk(state, active_fn, step_fn, max_steps=max_steps)
 
@@ -238,7 +264,7 @@ def _random_splitter_core(
 
         r, nxt_final = pointer_jump(
             spsucc, jnp.where(is_term, 0, w_adj),
-            iters=iters, impl="pallas_interpret",
+            iters=iters, impl="pallas",
         )
         rank_sp = r + w_adj[nxt_final]
     else:

@@ -150,3 +150,21 @@ def sampled_minibatch(
         "graph_ids": np.zeros(len(uniq), np.int32),
         "num_graphs": 1,
     }
+
+
+def random_succ(n: int, seed: int = 0) -> np.ndarray:
+    """Random linked-list succ[] with head 0 and self-loop terminal.
+
+    Plain numpy (no KISS): this is the list-ranking INPUT generator shared
+    by tests and benchmarks, not one of the paper's graph distributions.
+    """
+    r = np.random.default_rng(seed)
+    order = (
+        np.concatenate([[0], 1 + r.permutation(n - 1)])
+        if n > 1
+        else np.zeros(1, np.int64)
+    )
+    succ = np.empty(n, dtype=np.int32)
+    succ[order[:-1]] = order[1:]
+    succ[order[-1]] = order[-1]
+    return succ

@@ -1,1 +1,2 @@
-"""Distribution substrate: sharding rules, pipeline stages, collectives."""
+"""Distribution substrate: sharding rules, pipeline stages, collectives,
+and the edge-partitioned multi-device graph engine (``graph``)."""

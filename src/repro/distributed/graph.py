@@ -1,0 +1,320 @@
+"""Edge-partitioned multi-device graph engine (shard_map).
+
+The single-device kernels in ``repro.core`` treat the whole TPU as one
+PRAM; this module scales the paper's two headline algorithms across a
+1-D device mesh using the partitioning scheme Gunrock-style systems use:
+**edges are partitioned, labels are replicated**, and each round ends
+with one associative label exchange.
+
+* ``sharded_shiloach_vishkin`` -- each device min-hooks over its own
+  edge shard into its replica of the label array ``D``; a ``pmin``
+  exchange after SV2 (fused with a ``pmax`` of the activity stamps
+  ``Q``) and another after SV3 make the merged replica bit-identical to
+  the single-device min-CRCW scatter, because a min-scatter distributes
+  over shard unions:  min_shards(min-scatter(shard)) ==
+  min-scatter(all edges).  Short-cuts (SV1a/SV4) touch only replicated
+  state and run redundantly with zero communication.  The round
+  structure -- and therefore the paper's log_{3/2} n + 2 bound -- is
+  unchanged; only WHO walks each edge moved.
+
+* ``sharded_random_splitter_rank`` -- RS3's sub-list walks are
+  partitioned over devices by splitter block (device d walks lanes
+  [d*p/nd, (d+1)*p/nd)); each device scatter-writes (local_rank, owner)
+  for the nodes its sub-lists cover, and since sub-lists partition the
+  node set exactly one device writes each node: a single ``pmax``
+  merges the stores losslessly.  RS4 all-gathers the p-lane splitter
+  list (p is VMEM-sized by construction) and ranks it redundantly on
+  every device -- the multi-device analogue of the paper's single-block
+  ``__syncthreads`` fast path.  RS5's streaming aggregation is sharded
+  back out over node blocks, so the output materialises already
+  edge-partitioned (out_spec P(axis)).
+
+Both functions are bit-exact against their single-device counterparts
+(asserted by ``tests/multidev_scripts.py sharded_cc / sharded_rank``),
+and both report their per-round exchange volume so
+``benchmarks/multidev_scaling.py`` can plot communication vs devices.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.core.components import sv_round_bound, sv_run
+from repro.core.list_ranking import (
+    SplitterStats,
+    _splitter_list_rank,
+    aos_walk_fns,
+    max_splitters_for_linear_work,
+    select_splitters,
+)
+from repro.core.pram import lockstep_walk
+
+Array = jax.Array
+
+GRAPH_AXIS = "graph"
+
+
+def graph_mesh(num_devices: int | None = None, axis: str = GRAPH_AXIS) -> Mesh:
+    """1-D mesh over the first ``num_devices`` devices (default: all)."""
+    devs = jax.devices()
+    nd = num_devices if num_devices is not None else len(devs)
+    if nd > len(devs):
+        raise ValueError(f"asked for {nd} devices, have {len(devs)}")
+    return compat.make_mesh((nd,), (axis,), devices=devs[:nd])
+
+
+def _resolve_axis(mesh: Mesh, axis: str) -> str:
+    """Accept any 1-D mesh regardless of its axis name.
+
+    The engine partitions along a single axis; a user-built 1-D mesh
+    named anything (e.g. "data") works as-is, while multi-axis meshes
+    must name which axis carries the edges.
+    """
+    if axis in mesh.axis_names:
+        return axis
+    if len(mesh.axis_names) == 1:
+        return mesh.axis_names[0]
+    raise ValueError(
+        f"sharded graph engine needs a 1-D mesh or axis={axis!r} present; "
+        f"got mesh axes {mesh.axis_names}"
+    )
+
+
+def _pad_to(x: jnp.ndarray, size: int, fill) -> jnp.ndarray:
+    if x.shape[0] == size:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((size - x.shape[0],), fill, x.dtype)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded Shiloach-Vishkin connected components
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("num_nodes", "max_rounds", "mesh", "axis"),
+)
+def _sharded_sv(a, b, *, num_nodes, max_rounds, mesh, axis):
+    n = num_nodes
+    bound = max_rounds if max_rounds is not None else sv_round_bound(n)
+
+    def block(a_loc, b_loc):
+        # The round body itself lives in core.components.sv_run;
+        # this engine only chooses who walks which edges and inserts the
+        # two per-round exchanges: pmin merges each min-scatter (exchange
+        # 1 fused with a pmax of the activity stamps Q -- monotone round
+        # numbers, so max == "any device set it"), exchange 2 merges the
+        # SV3 hooks. Short-cuts run redundantly on replicated state.
+        return sv_run(
+            a_loc,
+            b_loc,
+            n,
+            bound,
+            merge_labels=lambda d: jax.lax.pmin(d, axis),
+            merge_stamps=lambda q: jax.lax.pmax(q, axis),
+        )
+
+    return compat.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(a, b)
+
+
+def sharded_shiloach_vishkin(
+    src: Array | np.ndarray,
+    dst: Array | np.ndarray,
+    num_nodes: int,
+    *,
+    mesh: Mesh | None = None,
+    axis: str = GRAPH_AXIS,
+    max_rounds: int | None = None,
+) -> tuple[Array, Array]:
+    """Multi-device connected components; bit-exact vs single-device.
+
+    Edges (both orientations, as in the paper's 2m walk) are partitioned
+    across the mesh; labels are replicated and min-merged twice per
+    round. Returns (labels, rounds) exactly like ``shiloach_vishkin``.
+    """
+    mesh = mesh if mesh is not None else graph_mesh(axis=axis)
+    axis = _resolve_axis(mesh, axis)
+    nd = mesh.shape[axis]
+    src = jnp.asarray(src).astype(jnp.int32)
+    dst = jnp.asarray(dst).astype(jnp.int32)
+    a = jnp.concatenate([src, dst])
+    b = jnp.concatenate([dst, src])
+    # Pad the edge shard to a device multiple with (0, 0) self-loops --
+    # inert under both hook conditions (SV2 needs Db < Da, SV3 Da != Db).
+    m2 = int(a.shape[0])
+    mp = max(-(-m2 // nd) * nd, nd)
+    a, b = _pad_to(a, mp, 0), _pad_to(b, mp, 0)
+    return _sharded_sv(
+        a, b, num_nodes=num_nodes, max_rounds=max_rounds, mesh=mesh, axis=axis
+    )
+
+
+def cc_exchange_words_per_round(num_nodes: int) -> int:
+    """int32 words a device sends per SV round: pmin(D2)+pmax(Q)+pmin(D3)."""
+    return 3 * num_nodes
+
+
+# ---------------------------------------------------------------------------
+# Sharded random-splitter list ranking
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "p", "pp", "npad", "max_steps", "mesh", "axis"),
+)
+def _sharded_rs(succ, spl_pad, *, n, p, pp, npad, max_steps, mesh, axis):
+    nd = mesh.shape[axis]
+    lanes_per = pp // nd
+
+    def block(succ, spl_all):
+        dev = jax.lax.axis_index(axis)
+        # RS1/RS2 (replicated): stop set + ownership seed from the full
+        # splitter list; every device computes the identical init.
+        spl = spl_all[:p]
+        all_lanes = jnp.arange(p, dtype=jnp.int32)
+        is_stop = jnp.zeros((n,), jnp.bool_).at[spl].set(True)
+        packed = jnp.full((n, 2), -1, jnp.int32)
+        packed = packed.at[:, 0].set(0)
+        packed = packed.at[spl, 1].set(all_lanes)
+
+        # RS3 (partitioned by splitter block): device d walks global
+        # lanes [d*lanes_per, (d+1)*lanes_per). Padded lanes (id >= p)
+        # are masked inert.
+        lanes = dev.astype(jnp.int32) * lanes_per + jnp.arange(
+            lanes_per, dtype=jnp.int32
+        )
+        valid = lanes < p
+        spl_loc = jax.lax.dynamic_slice(
+            spl_all, (dev * lanes_per,), (lanes_per,)
+        )
+        state = dict(
+            store=(packed,),
+            cur=spl_loc,
+            nxt=succ[spl_loc],
+            dist=jnp.ones((lanes_per,), jnp.int32),
+        )
+        # Walk predicate + scatter are the single-device ones (shared
+        # code); only the lane ids are offset and padded lanes masked.
+        active_fn, step_fn = aos_walk_fns(succ, is_stop, lanes, valid=valid)
+        final, steps = lockstep_walk(
+            state, active_fn, step_fn, max_steps=max_steps
+        )
+        (pk,) = final["store"]
+
+        # Merge the stores: sub-lists partition the nodes, so each node
+        # was written by exactly one device (local >= 1 over init 0,
+        # owner >= 0 over init -1) -> pmax is a lossless union. ONE
+        # n-sized exchange for the whole walk phase.
+        local = jax.lax.pmax(pk[:, 0], axis)
+        owner = jax.lax.pmax(pk[:, 1], axis)
+
+        # RS4 (gathered): the p-lane splitter list fits one device's
+        # VMEM; all-gather the per-lane walk results and rank the list
+        # redundantly on every replica.
+        dist_full = jax.lax.all_gather(final["dist"], axis, axis=0, tiled=True)[:p]
+        nxt_full = jax.lax.all_gather(final["nxt"], axis, axis=0, tiled=True)[:p]
+        spsucc = owner[nxt_full]
+        is_term = spsucc == all_lanes
+        w_adj = dist_full - is_term.astype(jnp.int32)
+        iters = max(1, math.ceil(math.log2(max(p, 2))))
+        rank_sp = _splitter_list_rank(w_adj, spsucc, iters)
+
+        # RS5 (sharded back out): each device aggregates its node block;
+        # the ranks come out already partitioned over the mesh.
+        blk = npad // nd
+        own_blk = jax.lax.dynamic_slice(
+            _pad_to(owner, npad, 0), (dev * blk,), (blk,)
+        )
+        loc_blk = jax.lax.dynamic_slice(
+            _pad_to(local, npad, 0), (dev * blk,), (blk,)
+        )
+        rank_blk = rank_sp[own_blk] - loc_blk
+
+        steps = jax.lax.pmax(steps, axis)  # global trip count
+        return rank_blk, dist_full, steps
+
+    return compat.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=(P(axis), P(), P()),
+        check_vma=False,
+    )(succ, spl_pad)
+
+
+def sharded_random_splitter_rank(
+    succ: Array | np.ndarray,
+    num_splitters: int | None = None,
+    *,
+    splitters: np.ndarray | None = None,
+    head: int = 0,
+    seed: int = 0,
+    mesh: Mesh | None = None,
+    axis: str = GRAPH_AXIS,
+    max_steps: int | None = None,
+    with_stats: bool = False,
+):
+    """Multi-device list ranking; bit-exact vs ``random_splitter_rank``.
+
+    Splitter selection (RS1/RS2) is identical to the single-device path
+    (same KISS streams, same seed), so the two implementations rank the
+    same sub-lists and produce identical integer ranks.
+    """
+    mesh = mesh if mesh is not None else graph_mesh(axis=axis)
+    axis = _resolve_axis(mesh, axis)
+    nd = mesh.shape[axis]
+    succ = jnp.asarray(succ).astype(jnp.int32)
+    n = int(succ.shape[0])
+    if splitters is None:
+        p = num_splitters or min(4096, max_splitters_for_linear_work(n))
+        p = min(p, n)
+        splitters = select_splitters(n, p, seed=seed, head=head)
+    splitters = np.asarray(splitters)
+    p = len(splitters)
+    pp = max(-(-p // nd) * nd, nd)  # lane padding (masked inert)
+    npad = max(-(-n // nd) * nd, nd)  # node padding for the RS5 out shard
+    spl_pad = _pad_to(jnp.asarray(splitters, jnp.int32), pp, 0)
+    rank_pad, sublens, steps = _sharded_rs(
+        succ,
+        spl_pad,
+        n=n,
+        p=p,
+        pp=pp,
+        npad=npad,
+        max_steps=max_steps,
+        mesh=mesh,
+        axis=axis,
+    )
+    rank = rank_pad[:n]
+    if not with_stats:
+        return rank
+    stats = SplitterStats(
+        splitters=np.asarray(splitters),
+        sublist_lengths=np.asarray(sublens),
+        walk_steps=int(steps),
+        expected_mean=n / p,
+    )
+    return rank, stats
+
+
+def rank_exchange_words(n: int, p: int, num_devices: int) -> int:
+    """int32 words a device sends for one sharded ranking call:
+    pmax(local)+pmax(owner) (2n) + two lane all-gathers (2p)."""
+    del num_devices  # replicated-label scheme: volume is device-local
+    return 2 * n + 2 * p

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 Array = jax.Array
 
 
@@ -88,7 +90,7 @@ def pipeline_apply(
         return jax.lax.psum(buf, stage_axis)
 
     spec_params = jax.tree.map(lambda _: P(stage_axis), stacked_params)
-    return jax.shard_map(
+    return shard_map(
         block,
         mesh=mesh,
         in_specs=(spec_params, P()),

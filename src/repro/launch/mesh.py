@@ -2,6 +2,9 @@
 
 Functions, not module-level constants: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before any jax import).
+
+All construction routes through ``repro.compat.make_mesh`` so the same
+builders work on jax 0.4.x (no AxisType / axis_types kwarg) and current.
 """
 from __future__ import annotations
 
@@ -9,6 +12,8 @@ import numpy as np
 
 import jax
 from jax.sharding import Mesh
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -23,8 +28,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax (launch/dryrun.py does this)."
         )
-    dev = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(dev, axes)
+    return make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_test_mesh(
@@ -32,8 +36,14 @@ def make_test_mesh(
 ) -> Mesh:
     """Small mesh over however many devices the test process has."""
     n = int(np.prod(shape))
-    dev = np.asarray(jax.devices()[:n]).reshape(shape)
-    return Mesh(dev, axes)
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_graph_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D edge-partitioning mesh for the sharded graph engine."""
+    from repro.distributed.graph import graph_mesh
+
+    return graph_mesh(num_devices)
 
 
 def mesh_num_chips(mesh: Mesh) -> int:

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.ops.sorted_dispatch import sort_by_key
 
 Array = jax.Array
@@ -252,7 +253,7 @@ def moe_ffn(
             if m.num_shared_experts
             else None
         )
-        return jax.shard_map(
+        return shard_map(
             lambda xb, r, wg, wu, wd, sh: block(xb, r, wg, wu, wd, sh),
             mesh=mesh,
             in_specs=(
@@ -333,7 +334,7 @@ def moe_ffn(
                 "w_up_shared": p["w_up_shared"],
                 "w_down_shared": p["w_down_shared"],
             }
-        return jax.shard_map(
+        return shard_map(
             lambda xb, r, wg, wu, wd, sh: block_psum(xb, r, wg, wu, wd, sh),
             mesh=mesh,
             in_specs=(
@@ -379,7 +380,7 @@ def moe_ffn(
             "w_up_shared": p["w_up_shared"],
             "w_down_shared": p["w_down_shared"],
         }
-    return jax.shard_map(
+    return shard_map(
         lambda xb, r, wg, wu, wd, sh: block_tp(xb, r, wg, wu, wd, sh),
         mesh=mesh,
         in_specs=(

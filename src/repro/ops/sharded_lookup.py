@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 Array = jax.Array
 
 
@@ -39,7 +41,7 @@ def sharded_row_gather(
 
     parts = tuple(idx_spec)
     out_spec = P(*(parts + (None,) * (idx.ndim - len(parts)) + (None,)))
-    return jax.shard_map(
+    return shard_map(
         block,
         mesh=mesh,
         in_specs=(P(row_axis, None), idx_spec),

@@ -7,17 +7,27 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+from repro.data.graphs import random_succ  # noqa: F401  (re-export for tests)
+
+# Optional hypothesis: property tests skip individually (instead of the
+# whole module erroring at collection) when it is not installed.
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()  # type: ignore[assignment]
+
+    def settings(*a, **k):  # type: ignore[no-redef]
+        return lambda f: f
+
+    def given(*a, **k):  # type: ignore[no-redef]
+        return pytest.mark.skip(reason="property test needs hypothesis")
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
-
-
-def random_succ(n: int, seed: int = 0) -> np.ndarray:
-    """Random linked-list succ[] with head 0 (plain numpy, no KISS)."""
-    r = np.random.default_rng(seed)
-    order = np.concatenate([[0], 1 + r.permutation(n - 1)]) if n > 1 else np.zeros(1, np.int64)
-    succ = np.empty(n, dtype=np.int32)
-    succ[order[:-1]] = order[1:]
-    succ[order[-1]] = order[-1]
-    return succ

@@ -16,11 +16,11 @@ def moe_ep():
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import make_mesh
     from repro.models.transformer import MoEConfig, TransformerConfig
     from repro.models.transformer.moe import init_moe_params, moe_ffn, moe_ffn_local
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     for ep_axes, n_exp in [(("model",), 8), (("data", "model"), 8), (("model",), 2)]:
         cfg = TransformerConfig(
             name="t", num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
@@ -46,10 +46,10 @@ def moe_ep():
 def pipeline_pp():
     import jax, jax.numpy as jnp
 
+    from repro.compat import make_mesh
     from repro.distributed.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("pod",))
     num_stages, layers_per_stage, d = 4, 2, 8
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (num_stages, layers_per_stage, d, d)) * 0.3
@@ -81,10 +81,10 @@ def sharded_lookup():
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import make_mesh
     from repro.ops.sharded_lookup import sharded_row_gather
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     table = jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)),
                         jnp.float32)
     idx = jnp.asarray(np.random.default_rng(1).integers(0, 64, (4, 6)),
@@ -104,10 +104,10 @@ def gnn_edge_parallel():
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import make_mesh
     from repro.configs import get_arch
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     arch = get_arch("gin-tu")
     cfg = arch.smoke_config
     r = np.random.default_rng(0)
@@ -131,6 +131,72 @@ def gnn_edge_parallel():
         g["dst"], NamedSharding(mesh, P(("data", "model"))))
     got = float(jax.jit(lambda p, gg: arch.module.loss_fn(p, cfg, gg))(params, gs))
     assert abs(got - ref) < 1e-4, (got, ref)
+    print("MULTIDEV_OK")
+
+
+def sharded_cc():
+    import jax
+
+    from repro.core import connected_components, shiloach_vishkin
+    from repro.distributed.graph import graph_mesh, sharded_shiloach_vishkin
+    from repro.ops.kiss import list_graph, random_graph, tree_graph
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = graph_mesh(8)
+    cases = [
+        ("list", 500, list_graph(500, 4, seed=1)),
+        ("tree", 500, tree_graph(500, 3, seed=2)),
+        ("random", 400, random_graph(400, 0.02, seed=3)),
+        ("tiny", 5, np.zeros((1, 2), np.int32)),  # shard < edge count
+    ]
+    r = np.random.default_rng(0)
+    cases.append(("dense", 120, r.integers(0, 120, (700, 2)).astype(np.int32)))
+    for name, n, edges in cases:
+        ref_lab, ref_rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+        lab, rounds = sharded_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lab), np.asarray(ref_lab), err_msg=name
+        )
+        assert int(rounds) == int(ref_rounds), (name, int(rounds), int(ref_rounds))
+        # auto-dispatch picks the sharded engine on this 8-device process
+        lab2, _ = connected_components(edges[:, 0], edges[:, 1], n)
+        np.testing.assert_array_equal(np.asarray(lab2), np.asarray(ref_lab))
+    print("MULTIDEV_OK")
+
+
+def sharded_rank():
+    import jax
+
+    from repro.core import list_rank, random_splitter_rank, select_splitters
+    from repro.data.graphs import random_succ
+    from repro.distributed.graph import graph_mesh, sharded_random_splitter_rank
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = graph_mesh(8)
+    for n, p, seed in [(1000, 64, 0), (777, 37, 5), (50, 3, 2), (9, 9, 1)]:
+        succ = random_succ(n, seed)
+        spl = select_splitters(n, p, seed=seed)
+        ref = np.asarray(random_splitter_rank(succ, splitters=spl))
+        got = np.asarray(
+            sharded_random_splitter_rank(succ, splitters=spl, mesh=mesh)
+        )
+        np.testing.assert_array_equal(got, ref, err_msg=f"n={n} p={p}")
+        # default splitter selection must agree too (same KISS streams)
+        ref2, st_ref = random_splitter_rank(succ, p, seed=seed, with_stats=True)
+        got2, st = sharded_random_splitter_rank(
+            succ, p, seed=seed, mesh=mesh, with_stats=True
+        )
+        np.testing.assert_array_equal(np.asarray(got2), np.asarray(ref2))
+        np.testing.assert_array_equal(st.sublist_lengths, st_ref.sublist_lengths)
+        assert st.walk_steps == st_ref.walk_steps
+    # auto-dispatch smoke (8 visible devices -> sharded engine)
+    succ = random_succ(321, 7)
+    np.testing.assert_array_equal(
+        np.asarray(list_rank(succ, 16, seed=3)),
+        np.asarray(random_splitter_rank(succ, 16, seed=3)),
+    )
     print("MULTIDEV_OK")
 
 

@@ -1,7 +1,8 @@
 """Shiloach-Vishkin + label propagation vs union-find oracle; the paper's
 round bound; graph-family behaviour (Figures 4-6 invariants)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
 
 from repro.core import (
     label_propagation,

@@ -2,9 +2,8 @@
 all pack modes, splitter statistics (paper Table 3 invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from conftest import random_succ
+from conftest import given, random_succ, settings, st
 from repro.core import (
     even_splitters,
     max_splitters_for_linear_work,

@@ -41,3 +41,13 @@ def test_sharded_embedding_lookup():
 @pytest.mark.slow
 def test_gnn_edge_parallel_loss_matches():
     _run("gnn_edge_parallel")
+
+
+@pytest.mark.slow
+def test_sharded_cc_matches_single_device():
+    _run("sharded_cc")
+
+
+@pytest.mark.slow
+def test_sharded_rank_matches_single_device():
+    _run("sharded_rank")

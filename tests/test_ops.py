@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
 
 from repro.core.pram import partitioning_indices, striding_indices
 from repro.ops import (

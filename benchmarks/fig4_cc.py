@@ -1,12 +1,19 @@
 """Paper Figure 4: connected-components runtime per graph family
 (lists, trees of degree k, random graphs of density d) vs the serial
-union-find baseline."""
+union-find baseline -- now with dense-vs-frontier engine columns and an
+``edges_touched`` derived metric (edge-slot visits at two hook passes
+per round, the Table 4 accounting; see benchmarks/cc_frontier.py for
+the dedicated frontier sweep)."""
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import SCALE, emit, time_fn
-from repro.core import label_propagation, shiloach_vishkin
+from repro.core import (
+    frontier_shiloach_vishkin,
+    label_propagation,
+    shiloach_vishkin,
+)
 from repro.core.serial import serial_connected_components
 from repro.ops.kiss import list_graph, random_graph, tree_graph
 
@@ -28,6 +35,13 @@ def run(n: int | None = None) -> list[str]:
             lambda e=edges: shiloach_vishkin(e[:, 0], e[:, 1], n)[0], iters=2
         )
         _, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+        t_fr = time_fn(
+            lambda e=edges: frontier_shiloach_vishkin(e[:, 0], e[:, 1], n)[0],
+            iters=2,
+        )
+        _, _, st = frontier_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, with_stats=True
+        )
         t_lp = time_fn(
             lambda e=edges: label_propagation(e[:, 0], e[:, 1], n)[0], iters=2
         )
@@ -36,8 +50,21 @@ def run(n: int | None = None) -> list[str]:
             serial_connected_components(edges, n)
             t_ser = time.perf_counter() - t0
             lines.append(emit(f"fig4/serial/{fam}/n={n}", t_ser * 1e6, f"m={m}"))
+        dense_touched = 2 * st.m2 * int(rounds)
         lines.append(
-            emit(f"fig4/sv/{fam}/n={n}", t_sv * 1e6, f"m={m};rounds={int(rounds)}")
+            emit(
+                f"fig4/sv/{fam}/n={n}",
+                t_sv * 1e6,
+                f"m={m};rounds={int(rounds)};edges_touched={dense_touched}",
+            )
+        )
+        lines.append(
+            emit(
+                f"fig4/sv_frontier/{fam}/n={n}",
+                t_fr * 1e6,
+                f"m={m};rounds={st.rounds};edges_touched={st.edges_touched};"
+                f"visit_ratio={dense_touched / max(st.edges_touched, 1):.2f}",
+            )
         )
         lines.append(emit(f"fig4/labelprop/{fam}/n={n}", t_lp * 1e6, f"m={m}"))
     return lines

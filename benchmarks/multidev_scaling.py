@@ -72,6 +72,24 @@ def run(n: int | None = None) -> list[str]:
             )
         )
         t = time_fn(
+            lambda m=mesh: sharded_shiloach_vishkin(
+                edges[:, 0], edges[:, 1], n, mesh=m, exchange="sparse"
+            )[0]
+        )
+        _, _, st = sharded_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh, exchange="sparse",
+            with_stats=True,
+        )
+        w = cc_exchange_words_per_round(n, stats=st)
+        lines.append(
+            emit(
+                f"cc_sharded_sparse_dev{d}",
+                t * 1e6,
+                f"capacity={st.capacity};wordsR1={int(w[0])};"
+                f"wordsLast={int(w[-1])};denseWords={3 * n}",
+            )
+        )
+        t = time_fn(
             lambda m=mesh: sharded_random_splitter_rank(
                 succ, splitters=spl, mesh=m
             )

@@ -1,12 +1,50 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV lines (benchmarks/common.emit).
+#
+#   python benchmarks/run.py                         # full sweep
+#   python benchmarks/run.py --smoke                 # n <= 4096 compile check
+#   python benchmarks/run.py --only cc_frontier,fig4_cc --json BENCH_cc.json
+#
+# --json writes the emitted lines as a perf snapshot: a list of
+# {suite, name, us_per_call, derived} records, so the repo's perf
+# trajectory is diffable commit over commit.
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import traceback
 
+SMOKE_SCALE = "0.005"  # largest suite base is 800_000 -> n=4000 caps the
+# smoke lane at n <= 4096 while still compile-checking every perf path
 
-def main() -> None:
+
+def _parse_line(suite: str, line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {
+        "suite": suite,
+        "name": name,
+        "us_per_call": float(us),
+        "derived": derived,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the emitted records as a JSON perf snapshot")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"tiny inputs (REPRO_BENCH_SCALE={SMOKE_SCALE}): "
+                         "compile-check every perf path in CI minutes")
+    ap.add_argument("--only", metavar="SUITES", default=None,
+                    help="comma-separated suite subset to run")
+    args = ap.parse_args(argv)
+
+    if args.smoke:  # must land before benchmarks.common reads the env
+        os.environ["REPRO_BENCH_SCALE"] = SMOKE_SCALE
+
     from benchmarks import (
+        cc_frontier,
         fig2_scaling,
         fig3_per_element,
         fig4_cc,
@@ -25,6 +63,7 @@ def main() -> None:
         ("fig2_scaling", fig2_scaling.run),
         ("fig3_per_element", fig3_per_element.run),
         ("fig4_cc", fig4_cc.run),
+        ("cc_frontier", cc_frontier.run),
         ("fig5_parallelism", fig5_parallelism.run),
         ("fig6_rounds", fig6_rounds.run),
         ("moe_dispatch", moe_dispatch.run),
@@ -33,15 +72,27 @@ def main() -> None:
         # 8-fake-device scaling table (see module docstring)
         ("multidev_scaling", multidev_scaling.run),
     ]
+    if args.only:
+        wanted = {s.strip() for s in args.only.split(",")}
+        unknown = wanted - {name for name, _ in suites}
+        if unknown:
+            raise SystemExit(f"unknown suites: {sorted(unknown)}")
+        suites = [(name, fn) for name, fn in suites if name in wanted]
+
     print("name,us_per_call,derived")
-    failures = []
+    records, failures = [], []
     for name, fn in suites:
         print(f"# === {name} ===", flush=True)
         try:
-            fn()
+            lines = fn() or []
+            records.extend(_parse_line(name, ln) for ln in lines)
         except Exception:
             failures.append(name)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}", flush=True)
     if failures:
         raise SystemExit(f"benchmark suites failed: {failures}")
 

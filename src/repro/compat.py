@@ -136,3 +136,23 @@ def shard_map(
     """
     kw = {_REP_KW: check_vma} if _REP_KW is not None else {}
     return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# --------------------------------------------------------------------------
+# Tracer detection (host-driven engines need concrete inputs)
+# --------------------------------------------------------------------------
+
+_TRACER_T = getattr(getattr(jax, "core", None), "Tracer", None)
+
+
+def is_tracer(x: Any) -> bool:
+    """True when ``x`` is a JAX tracer (i.e. we are inside a jit trace).
+
+    If a future release moves ``jax.core.Tracer``, fall back to the
+    class name (every tracer class is a ``*Tracer``) -- erring toward
+    tracer, because mis-dispatching a tracer into a host-driven engine
+    crashes while the traceable fallback path merely runs unfused.
+    """
+    if _TRACER_T is not None:
+        return isinstance(x, _TRACER_T)
+    return "Tracer" in type(x).__name__

@@ -12,7 +12,9 @@ from repro.core.components import (
     label_propagation,
     sv_round_bound,
     num_components,
+    dedup_edges,
 )
+from repro.core.frontier import frontier_shiloach_vishkin, FrontierStats
 from repro.core.pram import (
     striding_indices,
     partitioning_indices,
@@ -22,36 +24,119 @@ from repro.core.pram import (
 )
 
 
-def connected_components(src, dst, num_nodes, *, max_rounds=None, mesh=None):
+# Engine-specific tuning knobs: naming one pins the dispatch to that
+# engine (regardless of device count), so the same call behaves
+# identically on any machine -- the list_rank pack_mode convention.
+# hook_impl is shared by the two single-device engines (dense sv_run and
+# frontier), so it pins "single-device" rather than "frontier".
+_FRONTIER_KW = frozenset({"sample_rounds", "min_bucket", "seed"})
+_SINGLE_KW = _FRONTIER_KW | {"hook_impl"}
+_SHARDED_KW = frozenset({"exchange", "sparse_capacity", "axis"})
+
+
+def connected_components(
+    src, dst, num_nodes, *, max_rounds=None, mesh=None, engine="auto", **kwargs
+):
     """Connected components with automatic engine dispatch.
 
     Routes to the edge-partitioned multi-device engine
     (``repro.distributed.graph``) when a mesh is given or more than one
-    device is visible; otherwise runs the single-device kernel. Both
-    paths return identical (labels, rounds).
+    device is visible; otherwise runs the **frontier-compacted** engine
+    (``repro.core.frontier``), the single-device fast path. All paths
+    return identical (labels, rounds). ``engine="dense"`` is the escape
+    hatch back to the all-edges-every-round walk (single device:
+    ``sv_run``; with a mesh or several devices: the sharded engine,
+    which IS the dense walk). ``engine="frontier"`` forces the frontier
+    engine even when several devices are visible, but rejects an
+    explicit ``mesh=`` (no sharded frontier yet).
+
+    Extra kwargs go to the chosen engine and steer the auto dispatch:
+    frontier knobs (e.g. ``sample_rounds=2`` for the Afforest pre-pass)
+    pick the frontier engine on any machine, sharded knobs (e.g.
+    ``exchange="sparse"``) the sharded engine; mixing the two raises.
+    The frontier engine's shrink loop is host-driven, so inside a
+    ``jax.jit`` trace the auto path falls back to the (fully traceable)
+    dense ``sv_run`` loop.
     """
     import jax
 
-    if mesh is not None or jax.device_count() > 1:
-        from repro.distributed.graph import sharded_shiloach_vishkin
+    from repro.compat import is_tracer
 
-        return sharded_shiloach_vishkin(
-            src, dst, num_nodes, mesh=mesh, max_rounds=max_rounds
+    single_kw = _SINGLE_KW & kwargs.keys()
+    sharded_kw = _SHARDED_KW & kwargs.keys()
+    if single_kw and (sharded_kw or mesh is not None):
+        raise ValueError(
+            f"{sorted(single_kw)} are single-device options; drop them or "
+            f"drop {sorted(sharded_kw) or 'mesh='}"
         )
-    return shiloach_vishkin(src, dst, num_nodes, max_rounds=max_rounds)
+    tracing = is_tracer(src) or is_tracer(dst)
+    if engine == "auto":
+        if _FRONTIER_KW & kwargs.keys():
+            engine = "frontier"
+        elif single_kw:
+            # hook_impl alone: dense sv_run honours it too and is fully
+            # traceable, so a jit trace falls back there
+            engine = "dense" if tracing else "frontier"
+        elif mesh is not None or sharded_kw or jax.device_count() > 1:
+            engine = "_sharded"
+        else:
+            engine = "dense" if tracing else "frontier"
+    if engine == "frontier":
+        if sharded_kw:
+            raise ValueError(
+                f"{sorted(sharded_kw)} are sharded-engine options; drop "
+                "them or use engine='auto'"
+            )
+        if mesh is not None:
+            raise ValueError(
+                "the frontier engine is single-device; drop mesh= or use "
+                "engine='auto'/'dense'"
+            )
+        if tracing:
+            raise ValueError(
+                "the frontier engine's shrink loop is host-driven and "
+                "cannot run inside jit; call it outside jit or use "
+                "engine='dense'"
+            )
+        return frontier_shiloach_vishkin(
+            src, dst, num_nodes, max_rounds=max_rounds, **kwargs
+        )
+    if engine == "dense":
+        fkw = _FRONTIER_KW & kwargs.keys()
+        if fkw:
+            raise ValueError(
+                f"{sorted(fkw)} are frontier-engine options; use "
+                "engine='frontier'"
+            )
+        if single_kw or (mesh is None and not sharded_kw
+                         and jax.device_count() == 1):
+            # hook_impl pins the single-device sv_run loop on any machine
+            return shiloach_vishkin(
+                src, dst, num_nodes, max_rounds=max_rounds, **kwargs
+            )
+    elif engine != "_sharded":
+        raise ValueError(f"unknown engine {engine!r}")
+    # multi-device (or sharded knobs): the sharded engine IS the dense walk
+    from repro.distributed.graph import sharded_shiloach_vishkin
+
+    return sharded_shiloach_vishkin(
+        src, dst, num_nodes, mesh=mesh, max_rounds=max_rounds, **kwargs
+    )
 
 
-_SINGLE_ENGINE_KW = frozenset({"pack_mode", "kernel_impl"})
+_SINGLE_ENGINE_KW = frozenset({"pack_mode"})
 
 
 def list_rank(succ, num_splitters=None, *, mesh=None, **kwargs):
     """List ranking with automatic engine dispatch (see
     ``connected_components``).
 
-    ``pack_mode`` / ``kernel_impl`` are single-device tuning knobs: when
-    given (without an explicit mesh) the single-device engine runs
-    regardless of device count, so the same call behaves identically on
-    any machine; combining them WITH a mesh raises.
+    ``pack_mode`` is a single-device tuning knob: when given (without an
+    explicit mesh) the single-device engine runs regardless of device
+    count, so the same call behaves identically on any machine;
+    combining it WITH a mesh raises. ``kernel_impl`` is honoured by BOTH
+    engines (the sharded engine routes its RS4/RS5 phases through the
+    same Pallas kernels).
     """
     import jax
 
@@ -80,9 +165,12 @@ __all__ = [
     "max_splitters_for_linear_work",
     "SplitterStats",
     "shiloach_vishkin",
+    "frontier_shiloach_vishkin",
+    "FrontierStats",
     "label_propagation",
     "sv_round_bound",
     "num_components",
+    "dedup_edges",
     "striding_indices",
     "partitioning_indices",
     "strided_view",

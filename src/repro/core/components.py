@@ -14,6 +14,21 @@ DESIGN.md section 2:
   per-phase work counts match Table 4.
 * SV5's parallel-OR through racing writes to one word becomes ``jnp.any``.
 
+The round body is built once by ``sv_round_fns`` and shared by THREE
+engines so their hook semantics stay bit-identical by construction:
+
+* ``sv_run`` / ``shiloach_vishkin`` -- the dense single-device loop;
+* ``repro.core.frontier.frontier_shiloach_vishkin`` -- the
+  frontier-compacted engine (same body over a shrinking edge buffer);
+* ``repro.distributed.graph.sharded_shiloach_vishkin`` -- the
+  edge-partitioned engine (same body plus per-round label exchanges).
+
+Cross-replica merges use the convention ``fn(arr, base, aux, s) ->
+(arr, aux)``: ``base`` is the replicated pre-scatter array (what every
+device agreed on before this phase's min-scatter), which is what lets
+the sparse frontier exchange send only the (index, label) pairs that
+changed; ``aux`` threads exchange statistics through the round loop.
+
 ``label_propagation`` is the simple O(diameter)-round alternative used as a
 baseline in benchmarks (it wins on small-diameter random graphs, loses badly
 on chains -- the same graph-family sensitivity as the paper's Figure 4).
@@ -35,33 +50,91 @@ def sv_round_bound(n: int) -> int:
     return int(math.floor(math.log(max(n, 2)) / math.log(1.5))) + 2
 
 
-def sv_run(
+def _identity_merge(arr, base, aux, s):
+    del base, s
+    return arr, aux
+
+
+def _hook_phase_fns(a: Array, b: Array, n: int, hook_impl: str):
+    """SV2/SV3 hook phases over the edge arrays: either inline XLA
+    gathers + min-scatters, or the fused ``kernels/edge_hook`` Pallas
+    kernel (one VMEM-resident pass per edge tile)."""
+    if hook_impl != "xla":
+        from repro.kernels.edge_hook.ops import edge_hook
+
+        def sv2(D1, D, Q, s):
+            return edge_hook(a, b, D1, Q, s, labels_prev=D, mode="sv2",
+                             impl=hook_impl)
+
+        def sv3(D2, Q, s):
+            D3, _ = edge_hook(a, b, D2, Q, s, mode="sv3", impl=hook_impl)
+            # the fused kernel doesn't export its compare mask (yet);
+            # frontier callers recompute it (see sv_round_fns)
+            return D3, None
+
+        return sv2, sv3
+
+    def sv2(D1, D, Q, s):
+        # SV2: hook edges from trees that did NOT shrink onto smaller roots.
+        Da, Db = D1[a], D1[b]
+        stagnant_a = Da == D[a]
+        cond2 = jnp.logical_and(stagnant_a, Db < Da)
+        tgt2 = jnp.where(cond2, Da, n)
+        D2 = D1.at[tgt2].min(jnp.where(cond2, Db, n), mode="drop")
+        Q2 = Q.at[jnp.where(cond2, Db, n)].set(s, mode="drop")
+        return D2, Q2
+
+    def sv3(D2, Q, s):
+        # SV3: hook stagnant roots (no activity this round) onto any
+        # neighboring tree, breaking label-order ties via min-CRCW.
+        Da3, Db3 = D2[a], D2[b]
+        root_a = D2[Da3] == Da3
+        stagnant = Q[Da3] < s
+        live = Da3 != Db3
+        cond3 = stagnant & root_a & live
+        tgt3 = jnp.where(cond3, Da3, n)
+        # ``live`` rides along as the frontier mask: a superset of the
+        # edges still able to hook after this round (label equality is
+        # permanent), read off SV3's own gathers at zero extra passes.
+        return D2.at[tgt3].min(jnp.where(cond3, Db3, n), mode="drop"), live
+
+    return sv2, sv3
+
+
+def sv_round_fns(
     a: Array,
     b: Array,
     n: int,
-    bound: int,
     merge_labels=None,
     merge_stamps=None,
-) -> tuple[Array, Array]:
-    """The SV0..SV5 round loop over edge arrays (a, b).
+    hook_impl: str = "xla",
+    with_frontier: bool = False,
+):
+    """Build the SV1a..SV5 round body over edge arrays ``(a, b)``.
 
-    ``merge_labels`` / ``merge_stamps`` are cross-replica reductions
-    applied right after each min-scatter phase; identity on a single
-    device, pmin/pmax in the sharded engine. Keeping the round body in
-    ONE place is what guarantees the two engines stay bit-identical --
-    a min-scatter distributes over edge-shard unions, so inserting the
-    merges at these two points changes who walks each edge and nothing
-    else.
+    Returns ``round_body(carry) -> carry`` with carry
+    ``(D, Q, aux, s, changed)``. This is THE round body: every engine
+    (dense, frontier-compacted, sharded) runs it unmodified, so hook
+    semantics -- min-CRCW resolution, Q stamps, the round bound -- are
+    bit-identical across engines by construction.
+
+    ``with_frontier=True`` appends a per-edge frontier mask to the carry
+    (``(D, Q, aux, s, changed, fmask)``): a superset of the edges still
+    able to hook, read off the SV3 phase's own D[a]/D[b] gathers (the
+    pre-hook compare), so the frontier engine's shrink decisions cost no
+    extra edge passes on the XLA path. The Pallas hook kernel doesn't
+    export its compare mask, so that path recomputes the mask post-round
+    (one extra pass).
     """
-    ml = merge_labels if merge_labels is not None else (lambda d: d)
-    mq = merge_stamps if merge_stamps is not None else (lambda q: q)
-
-    # SV0: D(0)[j] = j, Q[j] = 0
-    D0 = jnp.arange(n, dtype=jnp.int32)
-    Q0 = jnp.zeros(n, jnp.int32)
+    ml = merge_labels if merge_labels is not None else _identity_merge
+    mq = merge_stamps if merge_stamps is not None else _identity_merge
+    sv2_hook, sv3_hook = _hook_phase_fns(a, b, n, hook_impl)
 
     def round_body(carry):
-        D, Q, s, _changed = carry
+        if with_frontier:
+            D, Q, aux, s, _changed, _fmask = carry
+        else:
+            D, Q, aux, s, _changed = carry
 
         # SV1a: short-cut.
         D1 = D[D]
@@ -69,63 +142,143 @@ def sv_run(
         # value s -> plain scatter-set with OOB drop for unmarked lanes.)
         mark = D1 != D
         Q = Q.at[jnp.where(mark, D1, n)].set(s, mode="drop")
+        q_base = Q  # replicated: the shrink marks are device-independent
 
-        # SV2: hook edges from trees that did NOT shrink onto smaller roots.
-        Da, Db = D1[a], D1[b]
-        stagnant_a = D1[a] == D[a]
-        cond2 = jnp.logical_and(stagnant_a, Db < Da)
-        tgt2 = jnp.where(cond2, Da, n)
-        D2 = D1.at[tgt2].min(jnp.where(cond2, Db, n), mode="drop")
-        Q = Q.at[jnp.where(cond2, Db, n)].set(s, mode="drop")
-        D2 = ml(D2)
-        Q = mq(Q)
+        D2, Q = sv2_hook(D1, D, Q, s)
+        D2, aux = ml(D2, D1, aux, s)
+        Q, aux = mq(Q, q_base, aux, s)
 
-        # SV3: hook stagnant roots (no activity this round) onto any
-        # neighboring tree, breaking label-order ties via min-CRCW.
-        Da3, Db3 = D2[a], D2[b]
-        root_a = D2[Da3] == Da3
-        stagnant = Q[Da3] < s
-        cond3 = stagnant & root_a & (Da3 != Db3)
-        tgt3 = jnp.where(cond3, Da3, n)
-        D3 = D2.at[tgt3].min(jnp.where(cond3, Db3, n), mode="drop")
-        D3 = ml(D3)
+        D3, fmask = sv3_hook(D2, Q, s)
+        D3, aux = ml(D3, D2, aux, s)
 
         # SV4: short-cut again.
         D4 = D3[D3]
 
         # SV5: parallel OR "did anything change this round?".
         changed = jnp.any(Q == s)
-        return D4, Q, s + 1, changed
+        if with_frontier:
+            if fmask is None:  # kernel path: mask needs its own compare
+                fmask = D4[a] != D4[b]
+            return D4, Q, aux, s + 1, changed, fmask
+        return D4, Q, aux, s + 1, changed
 
-    def cond(carry):
-        _D, _Q, s, changed = carry
-        return jnp.logical_and(changed, s <= bound)
+    return round_body
 
-    D, Q, s, _ = jax.lax.while_loop(
-        cond, round_body, (D0, Q0, jnp.int32(1), jnp.bool_(True))
+
+def sv_compress(D: Array, n: int) -> Array:
+    """Full path compression so labels are true roots (the paper reads
+    D directly; min-hooking can leave 2-level trees on the last round)."""
+    comp_iters = max(1, math.ceil(math.log2(max(n, 2))))
+    return jax.lax.fori_loop(0, comp_iters, lambda _, d: d[d], D)
+
+
+def sv_run(
+    a: Array,
+    b: Array,
+    n: int,
+    bound: int,
+    merge_labels=None,
+    merge_stamps=None,
+    *,
+    hook_impl: str = "xla",
+    aux0=None,
+    return_aux: bool = False,
+):
+    """The SV0..SV5 round loop over edge arrays (a, b).
+
+    ``merge_labels`` / ``merge_stamps`` are cross-replica reductions
+    ``fn(arr, base, aux, s) -> (arr, aux)`` applied right after each
+    min-scatter phase; identity on a single device, pmin/pmax (or the
+    sparse frontier exchange) in the sharded engine. ``base`` is the
+    replicated pre-scatter array and ``aux`` threads per-round exchange
+    stats. Keeping the round body in ONE place is what guarantees the
+    engines stay bit-identical -- a min-scatter distributes over
+    edge-shard unions, so inserting the merges at these two points
+    changes who walks each edge and nothing else.
+    """
+    # SV0: D(0)[j] = j, Q[j] = 0
+    D0 = jnp.arange(n, dtype=jnp.int32)
+    Q0 = jnp.zeros(n, jnp.int32)
+    aux = aux0 if aux0 is not None else jnp.int32(0)
+
+    round_body = sv_round_fns(
+        a, b, n, merge_labels, merge_stamps, hook_impl=hook_impl
     )
 
-    # Final full path compression so labels are true roots (the paper reads
-    # D directly; min-hooking can leave 2-level trees on the last round).
-    comp_iters = max(1, math.ceil(math.log2(max(n, 2))))
-    D = jax.lax.fori_loop(0, comp_iters, lambda _, d: d[d], D)
+    def cond(carry):
+        _D, _Q, _aux, s, changed = carry
+        return jnp.logical_and(changed, s <= bound)
+
+    D, _Q, aux, s, _ = jax.lax.while_loop(
+        cond, round_body, (D0, Q0, aux, jnp.int32(1), jnp.bool_(True))
+    )
+    D = sv_compress(D, n)
+    if return_aux:
+        return D, s - 1, aux
     return D, s - 1
 
 
-@partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))
+def dedup_edges(
+    src: Array | np.ndarray, dst: Array | np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Drop self-loops and duplicate undirected edges (host-side).
+
+    Self-loops can never hook (SV2 needs Db < Da, SV3 Da != Db) and
+    duplicates min-hook idempotently, so removing them changes neither
+    labels nor round count -- it only shrinks the 2m edge walk.
+    """
+    e = np.stack(
+        [np.asarray(src).ravel(), np.asarray(dst).ravel()], axis=1
+    ).astype(np.int64)
+    lo, hi = e.min(axis=1), e.max(axis=1)
+    keep = lo != hi
+    u = np.unique(np.stack([lo[keep], hi[keep]], axis=1), axis=0)
+    return u[:, 0].astype(np.int32), u[:, 1].astype(np.int32)
+
+
+def _maybe_dedup(src, dst, dedup: bool):
+    """Dedup host-side (numpy/list) edge inputs; pass device-resident or
+    traced arrays through untouched -- dedup is label/round-neutral, so
+    skipping it never changes results, and forcing a device-to-host sync
+    on every call would dominate hot loops. Device-array callers who
+    want the smaller walk dedup once via ``dedup_edges`` up front."""
+    host = isinstance(src, (np.ndarray, list, tuple)) and isinstance(
+        dst, (np.ndarray, list, tuple)
+    )
+    if not dedup or not host:
+        return src, dst
+    return dedup_edges(src, dst)
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "bound", "hook_impl"))
+def _sv_dense(src, dst, num_nodes, bound, hook_impl):
+    a = jnp.concatenate([src, dst]).astype(jnp.int32)
+    b = jnp.concatenate([dst, src]).astype(jnp.int32)
+    return sv_run(a, b, num_nodes, bound, hook_impl=hook_impl)
+
+
 def shiloach_vishkin(
-    src: Array, dst: Array, num_nodes: int, *, max_rounds: int | None = None
+    src: Array,
+    dst: Array,
+    num_nodes: int,
+    *,
+    max_rounds: int | None = None,
+    dedup: bool = True,
+    hook_impl: str = "xla",
 ) -> tuple[Array, Array]:
     """Connected components. Edges are treated as undirected (both
-    orientations are processed, matching the paper's 2m edge walk).
+    orientations are processed, matching the paper's 2m edge walk);
+    self-loops and duplicate edges in host-side (numpy) inputs are
+    dropped up front (``dedup=False`` restores the paper's raw walk for
+    work-count experiments; device-resident inputs skip the host sync
+    and can be pre-cleaned with ``dedup_edges``).
 
     Returns (labels, rounds). labels[i] is the component root id.
     """
     n = num_nodes
     bound = max_rounds if max_rounds is not None else sv_round_bound(n)
-    a = jnp.concatenate([src, dst]).astype(jnp.int32)
-    b = jnp.concatenate([dst, src]).astype(jnp.int32)
-    return sv_run(a, b, n, bound)
+    src, dst = _maybe_dedup(src, dst, dedup)
+    return _sv_dense(jnp.asarray(src), jnp.asarray(dst), n, bound, hook_impl)
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))
@@ -150,8 +303,7 @@ def label_propagation(
         body,
         (D0, jnp.int32(0), jnp.bool_(True)),
     )
-    comp_iters = max(1, math.ceil(math.log2(max(n, 2))))
-    D = jax.lax.fori_loop(0, comp_iters, lambda _, d: d[d], D)
+    D = sv_compress(D, n)
     return D, s
 
 

@@ -1,0 +1,250 @@
+"""Frontier-compacted Shiloach-Vishkin connected components.
+
+The dense engine (``components.sv_run``) walks all 2m edge orientations
+every round, but an edge whose endpoints already share a label can never
+hook again (labels of same-labeled nodes evolve identically under both
+short-cuts and min-hooks), so after the first few rounds most of the 2m
+walk is dead work -- the connected-components instance of the
+frontier-centric operators Gunrock showed are THE key GPU graph-analytics
+optimization. This engine compacts the edge list to the **active
+frontier** (edges with ``D[a] != D[b]``) between rounds:
+
+* the round body is ``components.sv_round_fns`` -- the SAME body the
+  dense and sharded engines run, so hook semantics (min-CRCW
+  resolution, Q stamps, the log_{3/2} n + 2 round bound) are
+  bit-identical and, with ``sample_rounds=0``, labels AND round counts
+  match ``sv_run`` exactly;
+* compiled shapes stay static via **size-bucketed shrink levels**: each
+  level runs a ``lax.while_loop`` at a fixed edge-buffer size and exits
+  when the live count falls below half the buffer; the host then
+  compacts into the next power-of-two bucket (padding with inert (0, 0)
+  self-loops) and resumes the loop carry ``(D, Q, s)`` unchanged.
+
+Optional **Afforest-style sampling pre-pass** (``sample_rounds=k > 0``),
+after Sutton, Ben-Nun & Barak, "Optimizing Parallel Graph Connectivity
+Computation via Subgraph Sampling" (IPDPS 2018): run k SV rounds that
+hook each node through one sampled incident edge (one streaming scatter
+pass builds all k samples), which resolves the giant component(s) at
+O(n) cost per round; the first frontier compaction then drops every
+edge internal to the largest component -- and to every other
+already-resolved component -- before full SV runs on the residue. The
+pre-pass changes which root represents each component (hooks happen in
+a different order), so it is OFF by default; labels remain a correct
+component partition and are canonicalization-equal to the dense
+engine's.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.components import (
+    _maybe_dedup,
+    sv_compress,
+    sv_round_bound,
+    sv_round_fns,
+)
+
+Array = jax.Array
+
+
+@dataclass
+class FrontierStats:
+    """Work accounting for the frontier engine (benchmarks/cc_frontier).
+
+    ``edges_touched`` counts edge-slot visits the way the paper's
+    Table 4 counts kernel work: each SV round walks its edge buffer
+    TWICE (one SV2 pass, one SV3 pass), each compaction writes the new
+    buffer once (the live mask is a by-product of the round's own
+    D[a]/D[b] gathers), and the sampling pre-pass streams the full edge
+    list once to build its (n, k) table. The dense engine's same-metric
+    cost is ``2 * m2 * rounds``.
+    """
+
+    rounds: int  # total SV rounds (pre-pass included)
+    edges_touched: int  # per-phase edge-slot visits (see docstring)
+    m2: int  # oriented edge count after dedup (dense walks this per phase)
+    levels: list = field(default_factory=list)  # (buffer_size, rounds) pairs
+    sample_rounds: int = 0
+    live_after_sample: int = 0  # frontier size after the pre-pass
+    largest_component_frac: float = 0.0  # node share of the Afforest giant
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length() if x > 0 else 1
+
+
+@partial(jax.jit, static_argnames=("n", "bound", "shrink_at", "hook_impl"))
+def _run_level(a, b, D, Q, s, *, n, bound, shrink_at, hook_impl):
+    """Run SV rounds at one fixed buffer size until convergence, the
+    round bound, or (when ``shrink_at`` is set) the frontier mask drops
+    to half the buffer -- whichever comes first. The mask is the round
+    body's own SV3 compare (``with_frontier=True``), so watching it
+    costs no extra edge passes; it is a superset of the truly-live
+    edges, which only delays a shrink, never breaks one."""
+    body = sv_round_fns(a, b, n, hook_impl=hook_impl, with_frontier=True)
+    m = a.shape[0]
+
+    def wrapped(carry):
+        D, Q, s, changed, fmask, rounds = carry
+        D, Q, _aux, s, changed, fmask = body(
+            (D, Q, jnp.int32(0), s, changed, fmask)
+        )
+        return D, Q, s, changed, fmask, rounds + 1
+
+    def cond(carry):
+        _D, _Q, s, changed, fmask, _rounds = carry
+        keep = jnp.logical_and(changed, s <= bound)
+        if shrink_at is not None:
+            live = jnp.sum(fmask.astype(jnp.int32))  # elementwise only
+            keep = jnp.logical_and(keep, live > shrink_at)
+        return keep
+
+    init = (D, Q, s, jnp.bool_(True), jnp.ones((m,), jnp.bool_), jnp.int32(0))
+    D, Q, s, changed, fmask, rounds = jax.lax.while_loop(cond, wrapped, init)
+    return D, Q, s, changed, fmask, rounds
+
+
+@partial(jax.jit, static_argnames=("size",))
+def _compact(a, b, fmask, *, size):
+    """Gather the masked frontier into a ``size``-slot buffer, padding
+    with inert (0, 0) self-loops. ``size`` must cover the mask count."""
+    m = a.shape[0]
+    idx = jnp.nonzero(fmask, size=size, fill_value=m)[0]
+    valid = idx < m
+    ic = jnp.minimum(idx, max(m - 1, 0))
+    return jnp.where(valid, a[ic], 0), jnp.where(valid, b[ic], 0)
+
+
+@partial(jax.jit, static_argnames=("n", "k"))
+def _build_samples(a, b, perm, *, n, k):
+    """ONE streaming scatter pass over the 2m edges fills an (n, k)
+    sampled-neighbor table (last write wins over a seeded permutation)."""
+    m = a.shape[0]
+    slot = jnp.arange(m, dtype=jnp.int32) % k
+    tbl = jnp.full((n, k), -1, jnp.int32)
+    return tbl.at[a[perm], slot].set(b[perm])
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _sample_round(neigh, D, Q, s, *, n):
+    """One SV round hooking every node through one sampled neighbor;
+    nodes without a sample become inert self-loops."""
+    sa = jnp.arange(n, dtype=jnp.int32)
+    sb = jnp.where(neigh >= 0, neigh, sa)
+    body = sv_round_fns(sa, sb, n)
+    D, Q, _aux, s, changed = body((D, Q, jnp.int32(0), s, jnp.bool_(True)))
+    return D, Q, s, changed
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _largest_component_frac(D, *, n):
+    counts = jnp.zeros((n,), jnp.int32).at[D].add(1)
+    return jnp.max(counts).astype(jnp.float32) / n
+
+
+def frontier_shiloach_vishkin(
+    src: Array,
+    dst: Array,
+    num_nodes: int,
+    *,
+    max_rounds: int | None = None,
+    dedup: bool = True,
+    sample_rounds: int = 0,
+    min_bucket: int = 1024,
+    hook_impl: str = "xla",
+    seed: int = 0,
+    with_stats: bool = False,
+):
+    """Connected components over a shrinking active-edge frontier.
+
+    Bit-exact vs ``shiloach_vishkin`` (labels AND rounds) when
+    ``sample_rounds=0``; with a sampling pre-pass the labels are a
+    correct partition with possibly different representatives. Returns
+    (labels, rounds), or (labels, rounds, FrontierStats) when
+    ``with_stats`` -- ``stats.edges_touched`` counts every edge slot
+    walked by a round plus one buffer pass per compaction/sampling,
+    the number the dense engine pays ``2m * rounds`` for.
+    """
+    n = num_nodes
+    src, dst = _maybe_dedup(src, dst, dedup)
+    src = jnp.asarray(src, jnp.int32).ravel()
+    dst = jnp.asarray(dst, jnp.int32).ravel()
+    a = jnp.concatenate([src, dst])
+    b = jnp.concatenate([dst, src])
+    m2 = int(a.shape[0])
+
+    bound = (max_rounds if max_rounds is not None else sv_round_bound(n))
+    bound += sample_rounds
+    D = jnp.arange(n, dtype=jnp.int32)
+    Q = jnp.zeros(n, jnp.int32)
+    s = jnp.int32(1)
+    stats = FrontierStats(rounds=0, edges_touched=0, m2=m2,
+                          sample_rounds=sample_rounds)
+
+    if sample_rounds > 0 and m2 > 0:
+        rng = np.random.default_rng(seed)
+        perm = jnp.asarray(rng.permutation(m2).astype(np.int32))
+        samples = _build_samples(a, b, perm, n=n, k=sample_rounds)
+        stats.edges_touched += m2  # the sampling pass streams all edges once
+        for t in range(sample_rounds):
+            D, Q, s, _changed = _sample_round(samples[:, t], D, Q, s, n=n)
+            stats.edges_touched += 2 * n  # SV2 + SV3 over the n sampled edges
+        if with_stats:  # O(n) scatter + host sync: only when asked for
+            stats.largest_component_frac = float(
+                _largest_component_frac(D, n=n)
+            )
+        # Compact straight away: drops ALL edges internal to the giant
+        # (and to every other component the pre-pass already resolved).
+        live_mask = D[a] != D[b]
+        live = int(jnp.sum(live_mask.astype(jnp.int32)))
+        stats.live_after_sample = live
+        stats.edges_touched += m2  # full-list live scan (pre-pass rounds
+        # walked only the sampled edges, so this mask needs its own pass)
+        size = min(m2, max(min_bucket, _next_pow2(live)))
+        a, b = _compact(a, b, live_mask, size=size)
+        m2_level = size
+    else:
+        m2_level = m2
+
+    force_converge = False
+    while True:
+        shrink_at = (
+            None if (m2_level <= min_bucket or force_converge)
+            else m2_level // 2
+        )
+        D, Q, s, changed, fmask, rounds = _run_level(
+            a, b, D, Q, s,
+            n=n, bound=bound, shrink_at=shrink_at, hook_impl=hook_impl,
+        )
+        # SV2 + SV3 passes; the Pallas hook kernel doesn't export its
+        # compare mask, so that path pays a third (mask) pass per round.
+        passes = 2 if hook_impl == "xla" else 3
+        stats.edges_touched += passes * int(rounds) * m2_level
+        stats.levels.append((m2_level, int(rounds)))
+        if not bool(changed) or int(s) > bound:
+            break
+        # Shrink: the masked frontier fits the next power-of-two bucket.
+        live = int(jnp.sum(fmask.astype(jnp.int32)))
+        new_size = max(min_bucket, _next_pow2(live))
+        if new_size >= m2_level:  # can't shrink further: run to convergence
+            force_converge = True
+            continue
+        # The mask came out of this level's last SV3 pass; only the
+        # gather-write of the surviving edges into the new buffer is
+        # extra work.
+        stats.edges_touched += new_size
+        a, b = _compact(a, b, fmask, size=new_size)
+        m2_level = new_size
+
+    D = sv_compress(D, n)
+    rounds_total = int(s) - 1
+    stats.rounds = rounds_total
+    if with_stats:
+        return D, jnp.int32(rounds_total), stats
+    return D, jnp.int32(rounds_total)

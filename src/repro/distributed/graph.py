@@ -17,6 +17,17 @@ with one associative label exchange.
   structure -- and therefore the paper's log_{3/2} n + 2 bound -- is
   unchanged; only WHO walks each edge moved.
 
+  ``exchange="sparse"`` replaces the O(n) full-array merges with the
+  **sparse frontier exchange**: each device all-gathers only the
+  (index, label) pairs its own scatter changed this round, in a
+  fixed-capacity buffer (default n/8), and every replica re-applies the
+  union onto the shared pre-scatter base -- the same distributivity
+  argument, restricted to the changed support, so still bit-exact. A
+  pmax'd overflow count flips all replicas together to the dense pmin
+  path when a round's frontier exceeds capacity (early rounds), cutting
+  late-round exchange volume from O(n) to O(capacity);
+  ``with_stats=True`` returns the measured per-round volumes.
+
 * ``sharded_random_splitter_rank`` -- RS3's sub-list walks are
   partitioned over devices by splitter block (device d walks lanes
   [d*p/nd, (d+1)*p/nd)); each device scatter-writes (local_rank, owner)
@@ -27,7 +38,10 @@ with one associative label exchange.
   every device -- the multi-device analogue of the paper's single-block
   ``__syncthreads`` fast path.  RS5's streaming aggregation is sharded
   back out over node blocks, so the output materialises already
-  edge-partitioned (out_spec P(axis)).
+  edge-partitioned (out_spec P(axis)).  ``kernel_impl`` routes RS4/RS5
+  through the Pallas kernels (``kernels/pointer_jump``,
+  ``kernels/splitter_aggregate``) inside each shard -- "auto" compiles
+  them on real TPUs and keeps plain XLA elsewhere.
 
 Both functions are bit-exact against their single-device counterparts
 (asserted by ``tests/multidev_scripts.py sharded_cc / sharded_rank``),
@@ -37,6 +51,7 @@ and both report their per-round exchange volume so
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -45,7 +60,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.components import sv_round_bound, sv_run
+from repro.core.components import _maybe_dedup, sv_round_bound, sv_run
 from repro.core.list_ranking import (
     SplitterStats,
     _splitter_list_rank,
@@ -99,37 +114,144 @@ def _pad_to(x: jnp.ndarray, size: int, fill) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _dense_merge_fns(axis, n):
+    """The replicated-label exchanges: full pmin/pmax every round."""
+
+    def merge_labels(d, base, aux, s):
+        words, frontier = aux
+        cnt = jnp.sum((d != base).astype(jnp.int32))
+        aux = (words.at[s].add(n), frontier.at[s].max(jax.lax.pmax(cnt, axis)))
+        return jax.lax.pmin(d, axis), aux
+
+    def merge_stamps(q, base, aux, s):
+        words, frontier = aux
+        return jax.lax.pmax(q, axis), (words.at[s].add(n), frontier)
+
+    return merge_labels, merge_stamps
+
+
+def _sparse_merge_fns(axis, n, capacity):
+    """Sparse frontier exchange: each device publishes only the (index,
+    label) pairs its own min-scatter changed this round, in a
+    fixed-capacity buffer; every replica applies the all-gathered pairs
+    onto the common pre-scatter base. Because a min-scatter distributes
+    over edge-shard unions, ``base.at[union of idx].min(vals)`` is
+    bit-identical to ``pmin`` of the full arrays -- whenever every
+    device's change count fits the buffer. One pmax'd scalar decides
+    overflow uniformly across replicas, so all devices fall back to the
+    dense pmin path together (``lax.cond`` stays collective-safe)."""
+    C = capacity
+
+    def publish_min(d, base, changed):
+        idx = jnp.nonzero(changed, size=C, fill_value=n)[0].astype(jnp.int32)
+        vals = jnp.where(idx < n, d[jnp.minimum(idx, n - 1)], n)
+        idx_all = jax.lax.all_gather(idx, axis, axis=0, tiled=True)
+        vals_all = jax.lax.all_gather(vals, axis, axis=0, tiled=True)
+        return base.at[idx_all].min(vals_all, mode="drop")
+
+    def merge_labels(d, base, aux, s):
+        words, frontier = aux
+        changed = d != base
+        cnt_max = jax.lax.pmax(jnp.sum(changed.astype(jnp.int32)), axis)
+        overflow = cnt_max > C
+        merged = jax.lax.cond(
+            overflow,
+            lambda _: jax.lax.pmin(d, axis),
+            lambda _: publish_min(d, base, changed),
+            operand=None,
+        )
+        # 2C words (idx, label) when sparse, n when dense; +1 for the
+        # pmax'd overflow count either way.
+        aux = (
+            words.at[s].add(jnp.where(overflow, n, 2 * C) + 1),
+            frontier.at[s].max(cnt_max),
+        )
+        return merged, aux
+
+    def merge_stamps(q, base, aux, s):
+        words, frontier = aux
+        changed = q != base
+        cnt_max = jax.lax.pmax(jnp.sum(changed.astype(jnp.int32)), axis)
+        overflow = cnt_max > C
+
+        def sparse(_):
+            idx = jnp.nonzero(changed, size=C, fill_value=n)[0].astype(
+                jnp.int32
+            )
+            idx_all = jax.lax.all_gather(idx, axis, axis=0, tiled=True)
+            # Every SV2 stamp this round is the same value s, so indices
+            # alone carry the exchange (C words, not 2C).
+            return base.at[idx_all].set(s, mode="drop")
+
+        merged = jax.lax.cond(
+            overflow, lambda _: jax.lax.pmax(q, axis), sparse, operand=None
+        )
+        aux = (words.at[s].add(jnp.where(overflow, n, C) + 1), frontier)
+        return merged, aux
+
+    return merge_labels, merge_stamps
+
+
 @partial(
     jax.jit,
-    static_argnames=("num_nodes", "max_rounds", "mesh", "axis"),
+    static_argnames=(
+        "num_nodes", "max_rounds", "mesh", "axis", "exchange", "capacity"
+    ),
 )
-def _sharded_sv(a, b, *, num_nodes, max_rounds, mesh, axis):
+def _sharded_sv(a, b, *, num_nodes, max_rounds, mesh, axis, exchange,
+                capacity):
     n = num_nodes
     bound = max_rounds if max_rounds is not None else sv_round_bound(n)
 
     def block(a_loc, b_loc):
         # The round body itself lives in core.components.sv_run;
         # this engine only chooses who walks which edges and inserts the
-        # two per-round exchanges: pmin merges each min-scatter (exchange
-        # 1 fused with a pmax of the activity stamps Q -- monotone round
-        # numbers, so max == "any device set it"), exchange 2 merges the
-        # SV3 hooks. Short-cuts run redundantly on replicated state.
+        # two per-round exchanges: the label merge after each min-scatter
+        # (exchange 1 fused with the activity-stamp merge -- monotone
+        # round numbers, so max == "any device set it"), exchange 2 for
+        # the SV3 hooks. Short-cuts run redundantly on replicated state.
+        # ``exchange="sparse"`` swaps the full-array pmin/pmax for the
+        # frontier-compacted (index, label) exchange.
+        if exchange == "sparse":
+            ml, mq = _sparse_merge_fns(axis, n, capacity)
+        else:
+            ml, mq = _dense_merge_fns(axis, n)
+        aux0 = (jnp.zeros(bound + 2, jnp.int32), jnp.zeros(bound + 2, jnp.int32))
         return sv_run(
-            a_loc,
-            b_loc,
-            n,
-            bound,
-            merge_labels=lambda d: jax.lax.pmin(d, axis),
-            merge_stamps=lambda q: jax.lax.pmax(q, axis),
+            a_loc, b_loc, n, bound,
+            merge_labels=ml, merge_stamps=mq,
+            aux0=aux0, return_aux=True,
         )
 
     return compat.shard_map(
         block,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), (P(), P())),
         check_vma=False,
     )(a, b)
+
+
+@dataclass
+class CCExchangeStats:
+    """Measured per-round exchange volume (``benchmarks/multidev_scaling``).
+
+    ``words_per_round[r]`` is the int32 words one device sent in round
+    r+1 across all three exchanges; ``frontier_per_round[r]`` is the
+    largest per-device changed-label count pmax'd that round (the sparse
+    payload the fixed-capacity buffer must hold to stay off the dense
+    fallback)."""
+
+    words_per_round: np.ndarray
+    frontier_per_round: np.ndarray
+    exchange: str
+    capacity: int | None
+
+
+def default_sparse_capacity(num_nodes: int) -> int:
+    """Per-device (index, label) buffer: n/8 keeps a no-overflow round's
+    label exchange at n/4 words vs the dense path's n."""
+    return max(64, num_nodes // 8)
 
 
 def sharded_shiloach_vishkin(
@@ -140,16 +262,27 @@ def sharded_shiloach_vishkin(
     mesh: Mesh | None = None,
     axis: str = GRAPH_AXIS,
     max_rounds: int | None = None,
-) -> tuple[Array, Array]:
+    exchange: str = "dense",
+    sparse_capacity: int | None = None,
+    dedup: bool = True,
+    with_stats: bool = False,
+):
     """Multi-device connected components; bit-exact vs single-device.
 
-    Edges (both orientations, as in the paper's 2m walk) are partitioned
-    across the mesh; labels are replicated and min-merged twice per
-    round. Returns (labels, rounds) exactly like ``shiloach_vishkin``.
+    Edges (both orientations, as in the paper's 2m walk, minus
+    self-loops and duplicates) are partitioned across the mesh; labels
+    are replicated and merged twice per round. ``exchange="sparse"``
+    sends only the (index, label) pairs each device changed (capacity
+    ``sparse_capacity``, default n/8, dense fallback on overflow) --
+    bit-exact either way. Returns (labels, rounds) exactly like
+    ``shiloach_vishkin``, plus a ``CCExchangeStats`` when ``with_stats``.
     """
+    if exchange not in ("dense", "sparse"):
+        raise ValueError(f"unknown exchange {exchange!r}")
     mesh = mesh if mesh is not None else graph_mesh(axis=axis)
     axis = _resolve_axis(mesh, axis)
     nd = mesh.shape[axis]
+    src, dst = _maybe_dedup(src, dst, dedup)  # no-op under a jit trace
     src = jnp.asarray(src).astype(jnp.int32)
     dst = jnp.asarray(dst).astype(jnp.int32)
     a = jnp.concatenate([src, dst])
@@ -159,13 +292,39 @@ def sharded_shiloach_vishkin(
     m2 = int(a.shape[0])
     mp = max(-(-m2 // nd) * nd, nd)
     a, b = _pad_to(a, mp, 0), _pad_to(b, mp, 0)
-    return _sharded_sv(
-        a, b, num_nodes=num_nodes, max_rounds=max_rounds, mesh=mesh, axis=axis
+    capacity = (
+        sparse_capacity if sparse_capacity is not None
+        else default_sparse_capacity(num_nodes)
     )
+    labels, rounds, (words, frontier) = _sharded_sv(
+        a, b, num_nodes=num_nodes, max_rounds=max_rounds, mesh=mesh,
+        axis=axis, exchange=exchange, capacity=capacity,
+    )
+    if not with_stats:
+        return labels, rounds
+    r = int(rounds)
+    stats = CCExchangeStats(
+        words_per_round=np.asarray(words)[1 : r + 1],
+        frontier_per_round=np.asarray(frontier)[1 : r + 1],
+        exchange=exchange,
+        capacity=capacity if exchange == "sparse" else None,
+    )
+    return labels, rounds, stats
 
 
-def cc_exchange_words_per_round(num_nodes: int) -> int:
-    """int32 words a device sends per SV round: pmin(D2)+pmax(Q)+pmin(D3)."""
+def cc_exchange_words_per_round(
+    num_nodes: int, *, stats: CCExchangeStats | None = None
+):
+    """int32 words a device sends per SV round.
+
+    Without ``stats``: the dense replicated-label model,
+    pmin(D2)+pmax(Q)+pmin(D3) = 3n, as a scalar. With ``stats`` (from
+    ``sharded_shiloach_vishkin(..., with_stats=True)``): the measured
+    per-round volumes, as an array -- for the sparse exchange this drops
+    to O(frontier buffer) once the per-round change counts fit capacity.
+    """
+    if stats is not None:
+        return stats.words_per_round
     return 3 * num_nodes
 
 
@@ -176,9 +335,13 @@ def cc_exchange_words_per_round(num_nodes: int) -> int:
 
 @partial(
     jax.jit,
-    static_argnames=("n", "p", "pp", "npad", "max_steps", "mesh", "axis"),
+    static_argnames=(
+        "n", "p", "pp", "npad", "max_steps", "mesh", "axis", "kernel_impl"
+    ),
 )
-def _sharded_rs(succ, spl_pad, *, n, p, pp, npad, max_steps, mesh, axis):
+def _sharded_rs(
+    succ, spl_pad, *, n, p, pp, npad, max_steps, mesh, axis, kernel_impl
+):
     nd = mesh.shape[axis]
     lanes_per = pp // nd
 
@@ -226,17 +389,30 @@ def _sharded_rs(succ, spl_pad, *, n, p, pp, npad, max_steps, mesh, axis):
 
         # RS4 (gathered): the p-lane splitter list fits one device's
         # VMEM; all-gather the per-lane walk results and rank the list
-        # redundantly on every replica.
+        # redundantly on every replica -- with kernel_impl="pallas" all
+        # O(log p) jumping steps run inside ONE kernels/pointer_jump
+        # call per device (the paper's single-block fast path).
         dist_full = jax.lax.all_gather(final["dist"], axis, axis=0, tiled=True)[:p]
         nxt_full = jax.lax.all_gather(final["nxt"], axis, axis=0, tiled=True)[:p]
         spsucc = owner[nxt_full]
         is_term = spsucc == all_lanes
         w_adj = dist_full - is_term.astype(jnp.int32)
         iters = max(1, math.ceil(math.log2(max(p, 2))))
-        rank_sp = _splitter_list_rank(w_adj, spsucc, iters)
+        if kernel_impl != "xla":
+            from repro.kernels.pointer_jump.ops import pointer_jump
+
+            r, nxt_final = pointer_jump(
+                spsucc, jnp.where(is_term, 0, w_adj),
+                iters=iters, impl=kernel_impl,
+            )
+            rank_sp = r + w_adj[nxt_final]
+        else:
+            rank_sp = _splitter_list_rank(w_adj, spsucc, iters)
 
         # RS5 (sharded back out): each device aggregates its node block;
-        # the ranks come out already partitioned over the mesh.
+        # the ranks come out already partitioned over the mesh. The
+        # pallas path streams the block through kernels/splitter_aggregate
+        # with the splitter table pinned in VMEM.
         blk = npad // nd
         own_blk = jax.lax.dynamic_slice(
             _pad_to(owner, npad, 0), (dev * blk,), (blk,)
@@ -244,7 +420,13 @@ def _sharded_rs(succ, spl_pad, *, n, p, pp, npad, max_steps, mesh, axis):
         loc_blk = jax.lax.dynamic_slice(
             _pad_to(local, npad, 0), (dev * blk,), (blk,)
         )
-        rank_blk = rank_sp[own_blk] - loc_blk
+        if kernel_impl != "xla":
+            from repro.kernels.splitter_aggregate.ops import splitter_aggregate
+
+            packed_blk = jnp.stack([loc_blk, own_blk], axis=-1)
+            rank_blk = splitter_aggregate(packed_blk, rank_sp, impl=kernel_impl)
+        else:
+            rank_blk = rank_sp[own_blk] - loc_blk
 
         steps = jax.lax.pmax(steps, axis)  # global trip count
         return rank_blk, dist_full, steps
@@ -268,6 +450,7 @@ def sharded_random_splitter_rank(
     mesh: Mesh | None = None,
     axis: str = GRAPH_AXIS,
     max_steps: int | None = None,
+    kernel_impl: str = "auto",
     with_stats: bool = False,
 ):
     """Multi-device list ranking; bit-exact vs ``random_splitter_rank``.
@@ -275,7 +458,20 @@ def sharded_random_splitter_rank(
     Splitter selection (RS1/RS2) is identical to the single-device path
     (same KISS streams, same seed), so the two implementations rank the
     same sub-lists and produce identical integer ranks.
+
+    ``kernel_impl`` routes the RS4/RS5 phases through the Pallas kernels
+    (``kernels/pointer_jump``, ``kernels/splitter_aggregate``) inside
+    each device's shard: "auto" compiles them on a real TPU backend and
+    keeps the plain-XLA phases elsewhere; "pallas"/"pallas_interpret"
+    force the kernel path (interpreted off-TPU). All routes are
+    bit-exact -- the phases are integer-exact in any implementation.
     """
+    from repro.kernels import on_tpu
+
+    if kernel_impl == "auto":
+        kernel_impl = "pallas" if on_tpu() else "xla"
+    if kernel_impl not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown kernel_impl {kernel_impl!r}")
     mesh = mesh if mesh is not None else graph_mesh(axis=axis)
     axis = _resolve_axis(mesh, axis)
     nd = mesh.shape[axis]
@@ -300,6 +496,7 @@ def sharded_random_splitter_rank(
         max_steps=max_steps,
         mesh=mesh,
         axis=axis,
+        kernel_impl=kernel_impl,
     )
     rank = rank_pad[:n]
     if not with_stats:

@@ -1,0 +1,3 @@
+from repro.kernels.edge_hook.ops import edge_hook
+
+__all__ = ["edge_hook"]

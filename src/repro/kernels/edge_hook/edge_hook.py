@@ -1,0 +1,109 @@
+"""Fused SV hook kernel: gather labels -> compare -> min-scatter per edge tile.
+
+The XLA lowering of the SV2/SV3 phases issues three separate gathers
+(D[a], D[b], and the stagnant/root probe) plus a scatter per phase, each
+a full HBM round trip over the label array. This kernel fuses the whole
+hook into ONE pass per edge tile with the label array (and the Q stamp
+array) pinned in VMEM across all grid steps -- the connected-components
+analogue of the paper's "single thread block + __syncthreads" fast path
+(guideline G4): the only HBM traffic is the streaming edge tiles.
+
+Correctness note: every gather reads the *input* label block (the
+pre-scatter D the XLA phases gather from), while the min-scatters
+accumulate into a separate output block across sequential grid steps.
+min is associative/commutative and the Q stamp writes all carry the same
+round number s, so the tiled accumulation is bit-identical to the
+monolithic XLA scatter regardless of tile order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _edge_hook_kernel(
+    s_ref, a_ref, b_ref, lab_ref, prev_ref, q_ref, lab_out_ref, q_out_ref,
+    *, mode: str, n: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        lab_out_ref[...] = lab_ref[...]
+        q_out_ref[...] = q_ref[...]
+
+    s = s_ref[0]
+    a = a_ref[...]
+    b = b_ref[...]
+    D = lab_ref[...]  # read-only pre-scatter labels: all gathers hit VMEM
+    Da = jnp.take(D, a, axis=0)
+    Db = jnp.take(D, b, axis=0)
+
+    if mode == "sv2":
+        # Hook edges from trees that did NOT shrink onto smaller roots,
+        # stamping the winning roots' activity in Q.
+        stagnant_a = Da == jnp.take(prev_ref[...], a, axis=0)
+        cond = jnp.logical_and(stagnant_a, Db < Da)
+        tgt = jnp.where(cond, Da, n)
+        lab_out_ref[...] = lab_out_ref[...].at[tgt].min(
+            jnp.where(cond, Db, n), mode="drop"
+        )
+        q_out_ref[...] = q_out_ref[...].at[jnp.where(cond, Db, n)].set(
+            s, mode="drop"
+        )
+    elif mode == "sv3":
+        # Hook stagnant roots onto any neighboring tree (min-CRCW ties).
+        Q = q_ref[...]
+        root_a = jnp.take(D, Da, axis=0) == Da
+        stagnant = jnp.take(Q, Da, axis=0) < s
+        cond = stagnant & root_a & (Da != Db)
+        tgt = jnp.where(cond, Da, n)
+        lab_out_ref[...] = lab_out_ref[...].at[tgt].min(
+            jnp.where(cond, Db, n), mode="drop"
+        )
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+
+def edge_hook_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    labels: jax.Array,
+    labels_prev: jax.Array,
+    stamps: jax.Array,
+    s: jax.Array,
+    *,
+    mode: str,
+    block_e: int = 8192,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused hook phase. a/b must be padded to a block_e multiple
+    with inert (0, 0) self-loops. Returns (labels_out, stamps_out);
+    stamps pass through untouched for mode="sv3"."""
+    m = a.shape[0]
+    n = labels.shape[0]
+    if m % block_e:
+        raise ValueError(f"m={m} must be padded to a multiple of {block_e}")
+    kernel = functools.partial(_edge_hook_kernel, mode=mode, n=n)
+    full = pl.BlockSpec((n,), lambda i: (0,))  # VMEM-resident, every step
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_e,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),  # streaming edge tiles
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            full,
+            full,
+            full,
+        ],
+        out_specs=[full, full],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), labels.dtype),
+            jax.ShapeDtypeStruct((n,), stamps.dtype),
+        ],
+        interpret=interpret,
+    )(jnp.reshape(s, (1,)).astype(jnp.int32), a, b, labels, labels_prev, stamps)

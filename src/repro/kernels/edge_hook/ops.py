@@ -1,0 +1,59 @@
+"""Public wrapper: fused SV hook with automatic path choice.
+
+``impl="auto"`` fuses on a real TPU whenever the label + stamp arrays
+fit VMEM (same small/large split as ``kernels/pointer_jump``) and falls
+back to the unfused XLA phases elsewhere; ``"pallas_interpret"`` runs
+the kernel body as plain JAX ops for CPU validation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret, on_tpu
+from repro.kernels.edge_hook.edge_hook import edge_hook_pallas
+from repro.kernels.edge_hook.ref import edge_hook_ref
+
+# Two int32 arrays (labels + stamps) resident plus streaming tiles; half
+# the pointer_jump budget keeps headroom for the edge tiles.
+VMEM_NODE_LIMIT = 1 << 19
+
+
+@partial(jax.jit, static_argnames=("mode", "impl", "block_e"))
+def edge_hook(
+    a: jax.Array,
+    b: jax.Array,
+    labels: jax.Array,
+    stamps: jax.Array,
+    s: jax.Array,
+    *,
+    labels_prev: jax.Array | None = None,
+    mode: str = "sv2",
+    impl: str = "auto",
+    block_e: int = 8192,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused hook phase over all edges. Returns (labels_out, stamps_out).
+
+    ``labels_prev`` (the pre-shortcut labels) is required for mode="sv2"
+    (the stagnant-tree check); mode="sv3" ignores it.
+    """
+    n = labels.shape[0]
+    prev = labels_prev if labels_prev is not None else labels
+    if impl == "auto":
+        impl = "pallas" if (on_tpu() and n <= VMEM_NODE_LIMIT) else "xla"
+    if impl == "xla":
+        return edge_hook_ref(a, b, labels, prev, stamps, s, mode=mode)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    interpret = default_interpret() if impl == "pallas" else True
+    m = a.shape[0]
+    pad = (-m) % block_e if m else block_e
+    # (0, 0) self-loop padding is inert under both hook conditions.
+    a = jnp.concatenate([a.astype(jnp.int32), jnp.zeros(pad, jnp.int32)])
+    b = jnp.concatenate([b.astype(jnp.int32), jnp.zeros(pad, jnp.int32)])
+    return edge_hook_pallas(
+        a, b, labels, prev, stamps, s,
+        mode=mode, block_e=block_e, interpret=interpret,
+    )

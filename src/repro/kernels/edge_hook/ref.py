@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the edge_hook kernel (the unfused SV2/SV3 phases)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_hook_ref(
+    a: jax.Array,
+    b: jax.Array,
+    labels: jax.Array,
+    labels_prev: jax.Array,
+    stamps: jax.Array,
+    s: jax.Array,
+    *,
+    mode: str,
+) -> tuple[jax.Array, jax.Array]:
+    n = labels.shape[0]
+    Da, Db = labels[a], labels[b]
+    if mode == "sv2":
+        stagnant_a = Da == labels_prev[a]
+        cond = jnp.logical_and(stagnant_a, Db < Da)
+        tgt = jnp.where(cond, Da, n)
+        out = labels.at[tgt].min(jnp.where(cond, Db, n), mode="drop")
+        q = stamps.at[jnp.where(cond, Db, n)].set(s, mode="drop")
+        return out, q
+    if mode == "sv3":
+        root_a = labels[Da] == Da
+        stagnant = stamps[Da] < s
+        cond = stagnant & root_a & (Da != Db)
+        tgt = jnp.where(cond, Da, n)
+        out = labels.at[tgt].min(jnp.where(cond, Db, n), mode="drop")
+        return out, stamps
+    raise ValueError(f"unknown mode {mode!r}")

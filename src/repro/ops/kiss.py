@@ -159,3 +159,16 @@ def random_forest(
             )
             edges.append(nodes[idx])
     return np.concatenate(edges, axis=0).astype(np.int32)
+
+
+def giant_dust_graph(
+    n: int, giant_frac: float = 0.9, seed: int = 0
+) -> np.ndarray:
+    """One giant component plus dust: a single KISS-random chain over
+    ``giant_frac`` of the nodes (worst-case diameter, so SV needs its
+    full O(log n) rounds on it), the rest isolated singletons. The
+    skewed-component-size family connectivity studies use to show
+    sampling / frontier skipping wins (most edges stop mattering after
+    the giant's labels coalesce)."""
+    g = max(2, int(n * giant_frac))
+    return list_graph(g, 1, seed=seed)  # nodes [g, n) stay isolated dust

@@ -166,6 +166,90 @@ def sharded_cc():
     print("MULTIDEV_OK")
 
 
+def sharded_cc_sparse():
+    import jax
+
+    from repro.core import shiloach_vishkin
+    from repro.distributed.graph import (
+        cc_exchange_words_per_round,
+        graph_mesh,
+        sharded_shiloach_vishkin,
+    )
+    from repro.ops.kiss import giant_dust_graph, list_graph, random_graph
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = graph_mesh(8)
+    cases = [
+        ("list", 500, list_graph(500, 4, seed=1)),
+        ("giant+dust", 600, giant_dust_graph(600, 0.9, seed=2)),
+        ("random", 400, random_graph(400, 0.02, seed=3)),
+        ("tiny", 5, np.zeros((1, 2), np.int32)),
+    ]
+    for name, n, edges in cases:
+        ref_lab, ref_rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+        lab, rounds, st = sharded_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh,
+            exchange="sparse", with_stats=True,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lab), np.asarray(ref_lab), err_msg=name
+        )
+        assert int(rounds) == int(ref_rounds), (name, int(rounds))
+        # measured volumes: late rounds must undercut the dense 3n model
+        words = cc_exchange_words_per_round(n, stats=st)
+        assert len(words) == int(rounds)
+        if int(rounds) > 1 and n >= 400:
+            assert int(words[-1]) < 3 * n, (name, words.tolist())
+        # once the frontier fits capacity, the exchange stays sparse
+        # (5C+3 words/round: a win only when capacity << n -- the tiny
+        # case's 64-pair floor exceeds 3n, so its volume check is skipped;
+        # the fallback itself triggers on overflow, not on cost)
+        if 5 * st.capacity + 3 < 3 * n:
+            fits = st.frontier_per_round <= st.capacity
+            assert (words[fits] < 3 * n).all(), (name, words.tolist())
+        # overflow fallback (capacity too small for ANY round) is bit-exact
+        lab2, rounds2 = sharded_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh,
+            exchange="sparse", sparse_capacity=2,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lab2), np.asarray(ref_lab), err_msg=f"{name}/overflow"
+        )
+        assert int(rounds2) == int(ref_rounds)
+    print("MULTIDEV_OK")
+
+
+def sharded_rank_pallas():
+    import jax
+
+    from repro.core import random_splitter_rank, select_splitters
+    from repro.data.graphs import random_succ
+    from repro.distributed.graph import graph_mesh, sharded_random_splitter_rank
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = graph_mesh(8)
+    for n, p, seed in [(1000, 64, 0), (333, 17, 4), (50, 3, 2)]:
+        succ = random_succ(n, seed)
+        spl = select_splitters(n, p, seed=seed)
+        ref = np.asarray(random_splitter_rank(succ, splitters=spl))
+        got = np.asarray(
+            sharded_random_splitter_rank(
+                succ, splitters=spl, mesh=mesh, kernel_impl="pallas_interpret"
+            )
+        )
+        np.testing.assert_array_equal(got, ref, err_msg=f"n={n} p={p}")
+    # "auto" resolves to the XLA phases off-TPU: same ranks either way
+    succ = random_succ(200, 9)
+    np.testing.assert_array_equal(
+        np.asarray(
+            sharded_random_splitter_rank(succ, 16, seed=1, mesh=mesh,
+                                         kernel_impl="auto")
+        ),
+        np.asarray(random_splitter_rank(succ, 16, seed=1)),
+    )
+    print("MULTIDEV_OK")
+
+
 def sharded_rank():
     import jax
 

@@ -1,0 +1,164 @@
+"""Frontier-compacted CC engine: bit-exactness vs the dense sv_run loop
+across adversarial graph families, work accounting, the Afforest-style
+sampling pre-pass, and edge dedup."""
+import numpy as np
+import pytest
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
+
+from repro.core import (
+    connected_components,
+    dedup_edges,
+    frontier_shiloach_vishkin,
+    num_components,
+    shiloach_vishkin,
+)
+from repro.core.serial import canonicalize_labels, serial_connected_components
+from repro.ops.kiss import giant_dust_graph, list_graph, random_graph, tree_graph
+
+
+def _star(n):
+    return np.stack(
+        [np.zeros(n - 1, np.int32), np.arange(1, n, dtype=np.int32)], axis=1
+    )
+
+
+def _adversarial_families():
+    r = np.random.default_rng(7)
+    return {
+        "long-chain": (2000, list_graph(2000, 1, seed=1)),
+        "star": (1500, _star(1500)),
+        "giant+dust": (2000, giant_dust_graph(2000, 0.9, seed=2)),
+        "empty": (17, np.zeros((0, 2), np.int32)),
+        "all-self-loops": (9, np.stack([np.arange(9)] * 2, axis=1).astype(np.int32)),
+        "tree": (1200, tree_graph(1200, 3, seed=3)),
+        "random": (800, random_graph(800, 0.01, seed=4)),
+        "dense-multigraph": (150, r.integers(0, 150, (3000, 2)).astype(np.int32)),
+    }
+
+
+@pytest.mark.parametrize(
+    "family", sorted(_adversarial_families()), ids=lambda f: f
+)
+def test_bit_exact_vs_dense(family):
+    n, edges = _adversarial_families()[family]
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    lab, rounds = frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, min_bucket=64
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+    assert int(rounds) == int(rounds_ref)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 100), st.integers(0, 300), st.integers(0, 10_000))
+def test_random_edge_lists_bit_exact(n, m, seed):
+    r = np.random.default_rng(seed)
+    edges = r.integers(0, n, size=(m, 2)).astype(np.int32)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    lab, rounds = frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, min_bucket=16
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+    assert int(rounds) == int(rounds_ref)
+
+
+def test_edges_touched_below_dense_on_chains():
+    n = 4000
+    edges = list_graph(n, 1, seed=5)
+    _, rounds = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    _, _, stats = frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, min_bucket=64, with_stats=True
+    )
+    dense = 2 * stats.m2 * int(rounds)
+    assert stats.edges_touched < dense / 2
+    sizes = [size for size, _ in stats.levels]
+    assert sizes == sorted(sizes, reverse=True)  # buckets only shrink
+    assert stats.rounds == int(rounds)
+
+
+def test_afforest_prepass_partition_correct():
+    for n, edges in [
+        (2000, giant_dust_graph(2000, 0.9, seed=6)),
+        (800, random_graph(800, 0.02, seed=7)),
+        (1200, tree_graph(1200, 3, seed=8)),
+    ]:
+        ref = canonicalize_labels(serial_connected_components(edges, n))
+        lab, _rounds, stats = frontier_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n,
+            sample_rounds=3, min_bucket=64, with_stats=True,
+        )
+        np.testing.assert_array_equal(
+            canonicalize_labels(np.asarray(lab)), ref
+        )
+        assert stats.sample_rounds == 3
+        assert 0.0 <= stats.largest_component_frac <= 1.0
+        # the pre-pass resolves edges before full SV sees them
+        assert stats.live_after_sample < stats.m2
+
+
+def test_hook_kernel_path_bit_exact():
+    n = 600
+    edges = tree_graph(n, 3, seed=9)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    lab, rounds = frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n,
+        min_bucket=64, hook_impl="pallas_interpret",
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+    assert int(rounds) == int(rounds_ref)
+
+
+def test_dedup_edges():
+    src = np.array([0, 1, 1, 2, 3, 3, 3], np.int32)
+    dst = np.array([1, 0, 1, 3, 2, 2, 3], np.int32)  # dups + self-loops
+    a, b = dedup_edges(src, dst)
+    assert a.tolist() == [0, 2] and b.tolist() == [1, 3]
+    # dedup changes neither labels nor rounds
+    for dedup in (True, False):
+        lab, rounds = shiloach_vishkin(src, dst, 5, dedup=dedup)
+        assert num_components(lab) == 3  # {0,1}, {2,3}, {4}
+        assert int(rounds) == 2
+
+
+def test_all_self_loops_single_round():
+    e = np.stack([np.arange(6)] * 2, axis=1).astype(np.int32)
+    lab, rounds = frontier_shiloach_vishkin(e[:, 0], e[:, 1], 6)
+    assert num_components(lab) == 6
+    assert int(rounds) == 1  # dedup leaves an empty walk: one no-op round
+
+
+def test_connected_components_engine_dispatch():
+    n = 500
+    edges = list_graph(n, 3, seed=10)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    for kwargs in (
+        {},  # auto: single visible device -> frontier engine
+        {"engine": "frontier"},
+        {"engine": "dense"},
+        {"engine": "frontier", "sample_rounds": 2},
+    ):
+        lab, rounds = connected_components(edges[:, 0], edges[:, 1], n, **kwargs)
+        if kwargs.get("sample_rounds"):
+            np.testing.assert_array_equal(
+                canonicalize_labels(np.asarray(lab)),
+                canonicalize_labels(np.asarray(ref)),
+            )
+        else:
+            np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+            assert int(rounds) == int(rounds_ref)
+    with pytest.raises(ValueError):
+        connected_components(edges[:, 0], edges[:, 1], n, engine="bogus")
+    # an explicit mesh contradicts the single-device frontier engine
+    from repro.distributed.graph import graph_mesh
+
+    with pytest.raises(ValueError, match="single-device"):
+        connected_components(
+            edges[:, 0], edges[:, 1], n, engine="frontier", mesh=graph_mesh(1)
+        )
+    # engine="dense" + mesh routes to the sharded engine (the dense walk)
+    lab, rounds = connected_components(
+        edges[:, 0], edges[:, 1], n, engine="dense", mesh=graph_mesh(1)
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+    assert int(rounds) == int(rounds_ref)

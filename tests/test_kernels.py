@@ -5,6 +5,8 @@ import numpy as np
 import pytest
 
 from conftest import random_succ
+from repro.kernels.edge_hook.ops import edge_hook
+from repro.kernels.edge_hook.ref import edge_hook_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.pointer_jump.ops import pointer_jump
@@ -23,6 +25,41 @@ def test_pointer_jump_sweep(p):
     r2, l2 = pointer_jump_ref(succ, w, iters=iters)
     np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
     np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+@pytest.mark.parametrize("mode", ["sv2", "sv3"])
+@pytest.mark.parametrize(
+    "n,m,block_e", [(64, 300, 128), (500, 2000, 512), (1000, 777, 256)]
+)
+def test_edge_hook_sweep(mode, n, m, block_e):
+    r = np.random.default_rng(n * 31 + m)
+    a = jnp.asarray(r.integers(0, n, m).astype(np.int32))
+    b = jnp.asarray(r.integers(0, n, m).astype(np.int32))
+    # arbitrary label forest + stamps: the kernel contract is phasewise,
+    # not whole-algorithm, so any state exercises it
+    labels = jnp.asarray(r.integers(0, n, n).astype(np.int32))
+    prev = jnp.asarray(r.integers(0, n, n).astype(np.int32))
+    stamps = jnp.asarray(r.integers(0, 3, n).astype(np.int32))
+    s = jnp.int32(3)
+    got_d, got_q = edge_hook(
+        a, b, labels, stamps, s, labels_prev=prev, mode=mode,
+        impl="pallas_interpret", block_e=block_e,
+    )
+    ref_d, ref_q = edge_hook_ref(a, b, labels, prev, stamps, s, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(ref_d))
+    np.testing.assert_array_equal(np.asarray(got_q), np.asarray(ref_q))
+
+
+def test_edge_hook_empty_edges():
+    labels = jnp.arange(10, dtype=jnp.int32)
+    stamps = jnp.zeros(10, jnp.int32)
+    empty = jnp.zeros((0,), jnp.int32)
+    got_d, got_q = edge_hook(
+        empty, empty, labels, stamps, jnp.int32(1),
+        mode="sv3", impl="pallas_interpret", block_e=64,
+    )
+    np.testing.assert_array_equal(np.asarray(got_d), np.arange(10))
+    np.testing.assert_array_equal(np.asarray(got_q), np.zeros(10))
 
 
 @pytest.mark.parametrize("n,p,block", [(100, 4, 64), (5000, 64, 512), (4096, 128, 2048)])

@@ -51,3 +51,13 @@ def test_sharded_cc_matches_single_device():
 @pytest.mark.slow
 def test_sharded_rank_matches_single_device():
     _run("sharded_rank")
+
+
+@pytest.mark.slow
+def test_sharded_cc_sparse_exchange_bit_exact():
+    _run("sharded_cc_sparse")
+
+
+@pytest.mark.slow
+def test_sharded_rank_pallas_kernels():
+    _run("sharded_rank_pallas")

@@ -4,10 +4,22 @@
 #   python benchmarks/run.py                         # full sweep
 #   python benchmarks/run.py --smoke                 # n <= 4096 compile check
 #   python benchmarks/run.py --only cc_frontier,fig4_cc --json BENCH_cc.json
+#   python benchmarks/run.py --smoke --check BENCH_smoke.json
 #
 # --json writes the emitted lines as a perf snapshot: a list of
 # {suite, name, us_per_call, derived} records, so the repo's perf
 # trajectory is diffable commit over commit.
+#
+# --check SNAPSHOT is the regression guard: it re-runs the snapshot's
+# suites (unless --only narrows them) and compares every numeric
+# ``key=value`` counter in the ``derived`` fields -- edge visits,
+# exchange words, rounds, tree/arc counts -- against the snapshot
+# within --check-tol relative tolerance. Wall times are never compared
+# (CI machines vary); the counters are deterministic at a given scale,
+# so the snapshot must have been produced at the same scale flags
+# (CI checks a --smoke snapshot). A snapshot record whose (suite, name)
+# is missing from the fresh run fails the check too: losing a counter
+# silently is itself a regression.
 from __future__ import annotations
 
 import argparse
@@ -29,6 +41,53 @@ def _parse_line(suite: str, line: str) -> dict:
     }
 
 
+def _derived_counters(derived: str) -> dict:
+    """Numeric key=value pairs from a derived field ("a=1;b=2.5;c=x")."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def check_records(
+    snapshot: list[dict], fresh: list[dict], tol: float,
+    suites_run: set[str] | None = None,
+) -> list[str]:
+    """Compare counters in ``fresh`` against ``snapshot``; returns a
+    list of human-readable mismatch descriptions (empty = pass).
+    Snapshot records from suites outside ``suites_run`` (an explicit
+    --only narrowing) are skipped, not reported missing."""
+    fresh_by_key = {(r["suite"], r["name"]): r for r in fresh}
+    problems = []
+    for rec in snapshot:
+        if suites_run is not None and rec["suite"] not in suites_run:
+            continue
+        key = (rec["suite"], rec["name"])
+        now = fresh_by_key.get(key)
+        if now is None:
+            problems.append(f"{key[1]}: missing from fresh run")
+            continue
+        want = _derived_counters(rec["derived"])
+        got = _derived_counters(now["derived"])
+        for k, old in want.items():
+            if k not in got:
+                problems.append(f"{key[1]}: counter {k} disappeared")
+                continue
+            new = got[k]
+            if abs(new - old) > tol * max(abs(old), 1.0):
+                problems.append(
+                    f"{key[1]}: {k} moved {old:g} -> {new:g} "
+                    f"(tol {tol:.0%})"
+                )
+    return problems
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -38,10 +97,24 @@ def main(argv=None) -> None:
                          "compile-check every perf path in CI minutes")
     ap.add_argument("--only", metavar="SUITES", default=None,
                     help="comma-separated suite subset to run")
+    ap.add_argument("--check", metavar="SNAPSHOT", default=None,
+                    help="compare fresh derived counters against this "
+                         "snapshot (same scale!); implies --only the "
+                         "snapshot's suites unless --only is given")
+    ap.add_argument("--check-tol", type=float, default=0.05,
+                    help="relative tolerance for --check counters "
+                         "(default 0.05)")
     args = ap.parse_args(argv)
 
     if args.smoke:  # must land before benchmarks.common reads the env
         os.environ["REPRO_BENCH_SCALE"] = SMOKE_SCALE
+
+    snapshot = None
+    if args.check:
+        with open(args.check) as f:
+            snapshot = json.load(f)
+        if args.only is None:
+            args.only = ",".join(sorted({r["suite"] for r in snapshot}))
 
     from benchmarks import (
         cc_frontier,
@@ -55,6 +128,7 @@ def main(argv=None) -> None:
         roofline_table,
         table2_packing,
         table3_splitters,
+        tree_ops,
     )
 
     suites = [
@@ -64,6 +138,7 @@ def main(argv=None) -> None:
         ("fig3_per_element", fig3_per_element.run),
         ("fig4_cc", fig4_cc.run),
         ("cc_frontier", cc_frontier.run),
+        ("tree_ops", tree_ops.run),
         ("fig5_parallelism", fig5_parallelism.run),
         ("fig6_rounds", fig6_rounds.run),
         ("moe_dispatch", moe_dispatch.run),
@@ -93,6 +168,24 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)
         print(f"# wrote {len(records)} records to {args.json}", flush=True)
+    if snapshot is not None and not failures:
+        ran = {name for name, _ in suites}
+        problems = check_records(
+            snapshot, records, args.check_tol, suites_run=ran
+        )
+        if problems:
+            for p in problems:
+                print(f"# CHECK FAIL {p}", flush=True)
+            raise SystemExit(
+                f"--check {args.check}: {len(problems)} counter "
+                "regressions (see CHECK FAIL lines)"
+            )
+        compared = sum(r["suite"] in ran for r in snapshot)
+        print(
+            f"# check passed: {compared} records within "
+            f"{args.check_tol:.0%} of {args.check}",
+            flush=True,
+        )
     if failures:
         raise SystemExit(f"benchmark suites failed: {failures}")
 

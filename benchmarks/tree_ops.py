@@ -1,0 +1,94 @@
+"""Euler-tour tree analytics: forest -> tour -> batched computations.
+
+Sweeps the three tree-workload shapes the subsystem targets -- one big
+random tree (list ranking dominates), a path (worst-case depth, the
+regime where the paper's list-ranking engines matter most), and a
+molecule-batch-style forest of many small trees served as ONE padded
+tour (the concurrent small-graph-requests scenario) -- and reports wall
+time per stage plus deterministic structure counters (trees, arcs,
+max depth) that double as regression-guard material for
+``run.py --check``. The compute stage runs on BOTH ranking engines;
+their counters must agree (the results are bit-identical integers).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.data.graphs import random_tree, random_tree_forest
+from repro.trees import (
+    euler_tour,
+    spanning_forest,
+    tour_capacity,
+    tree_computations,
+)
+
+
+def _families(n):
+    path = np.stack(
+        [np.arange(n - 1, dtype=np.int32),
+         np.arange(1, n, dtype=np.int32)], axis=1
+    )
+    return {
+        "one-tree": random_tree(n, seed=1),
+        "path": path,
+        "molecule-batch": random_tree_forest(n, max(2, n // 30), seed=2),
+    }
+
+
+def run(n: int | None = None) -> list[str]:
+    n = n or int(200_000 * SCALE)
+    lines = []
+    for fam, edges in _families(n).items():
+        u, v = edges[:, 0], edges[:, 1]
+        t_forest = time_fn(
+            lambda: spanning_forest(u, v, n).labels, iters=2
+        )
+        forest = spanning_forest(u, v, n)
+        lines.append(
+            emit(
+                f"tree_ops/forest/{fam}/n={n}",
+                t_forest * 1e6,
+                f"trees={forest.num_trees};edges={forest.num_edges}",
+            )
+        )
+        cap = tour_capacity(forest.num_edges)
+        t_tour = time_fn(
+            lambda: euler_tour(
+                forest.edge_u, forest.edge_v, n,
+                labels=forest.labels, pad_to=cap,
+            ).succ,
+            iters=2,
+        )
+        tour = euler_tour(
+            forest.edge_u, forest.edge_v, n,
+            labels=forest.labels, pad_to=cap,
+        )
+        lines.append(
+            emit(
+                f"tree_ops/tour/{fam}/n={n}",
+                t_tour * 1e6,
+                f"arcs={tour.num_arcs};capacity={tour.capacity}",
+            )
+        )
+        for engine in ("wylie", "splitter"):
+            t_comp = time_fn(
+                lambda: tree_computations(tour, rank_engine=engine).depth,
+                iters=2,
+            )
+            comp = tree_computations(tour, rank_engine=engine)
+            max_depth = int(np.max(np.asarray(comp.depth))) if n else 0
+            total_size = int(np.sum(np.asarray(comp.subtree_size)))
+            lines.append(
+                emit(
+                    f"tree_ops/compute/{fam}/{engine}/n={n}",
+                    t_comp * 1e6,
+                    f"max_depth={max_depth};size_sum={total_size};"
+                    f"arcs={tour.num_arcs}",
+                )
+            )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

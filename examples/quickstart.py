@@ -18,10 +18,12 @@ from repro.core import (
     random_splitter_rank,
     shiloach_vishkin,
     sv_round_bound,
+    tree_analytics,
     wylie_rank,
 )
 from repro.core.serial import serial_connected_components, serial_list_rank, canonicalize_labels
 from repro.ops.kiss import random_forest, random_linked_list
+from repro.trees.reference import serial_tree_reference
 
 
 def main():
@@ -70,6 +72,24 @@ def main():
     ref = canonicalize_labels(serial_connected_components(edges, n))
     assert (canonicalize_labels(np.asarray(labels)) == ref).all()
     print("verified against union-find")
+
+    print("\n== euler-tour tree analytics (the two primitives composed) ==")
+    t0 = time.perf_counter()
+    ta = tree_analytics(edges[:, 0], edges[:, 1], n)
+    dt = time.perf_counter() - t0
+    depth = np.asarray(ta.depth)
+    sizes = np.asarray(ta.subtree_size)
+    roots = np.asarray(ta.parent) == np.arange(n)
+    print(
+        f"forest -> tour -> computations: {dt*1e3:8.1f} ms  "
+        f"(trees={ta.forest.num_trees}, arcs={ta.tour.num_arcs}, "
+        f"max depth={depth.max()}, largest tree={sizes[roots].max()})"
+    )
+    ref = serial_tree_reference(ta.forest.edge_u, ta.forest.edge_v, n)
+    assert (depth == ref["depth"]).all() and (
+        np.asarray(ta.parent) == ref["parent"]
+    ).all()
+    print("verified against serial Euler walk")
 
 
 if __name__ == "__main__":

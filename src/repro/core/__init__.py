@@ -13,6 +13,7 @@ from repro.core.components import (
     sv_round_bound,
     num_components,
     dedup_edges,
+    check_choice,
 )
 from repro.core.frontier import frontier_shiloach_vishkin, FrontierStats
 from repro.core.pram import (
@@ -32,6 +33,34 @@ from repro.core.pram import (
 _FRONTIER_KW = frozenset({"sample_rounds", "min_bucket", "seed"})
 _SINGLE_KW = _FRONTIER_KW | {"hook_impl"}
 _SHARDED_KW = frozenset({"exchange", "sparse_capacity", "axis"})
+_CC_ENGINES = ("auto", "frontier", "dense")
+
+# Sampling policy (ROADMAP decision, PR 3): when the auto dispatch
+# lands on the frontier engine and the graph is edge-heavy -- at least
+# AUTO_SAMPLE_DENSITY input edges per node -- the Afforest-style
+# pre-pass is enabled automatically with AUTO_SAMPLE_ROUNDS rounds: on
+# dense graphs the giant component(s) resolve at O(n)/round and the
+# first compaction drops most of the edge walk, while the labels remain
+# a correct partition (representatives may differ from the dense
+# engine's -- the reason the pre-pass stays off for sparse graphs and
+# for explicit ``engine=``). Pass ``sample_rounds=0`` (or any explicit
+# value) to override, or ``engine="frontier"``/``"dense"`` to pin the
+# exact dense-engine representatives.
+AUTO_SAMPLE_DENSITY = 8.0
+AUTO_SAMPLE_ROUNDS = 2
+
+
+def _auto_sample_rounds(src, num_nodes):
+    """Afforest pre-pass rounds for the auto dispatch: 0 unless the
+    input is host-visible and edge-heavy (m/n >= AUTO_SAMPLE_DENSITY)."""
+    shape = getattr(src, "shape", None)
+    if shape is not None:
+        m = shape[0] if len(shape) else 0
+    else:
+        m = len(src) if hasattr(src, "__len__") else 0
+    if num_nodes > 0 and m / num_nodes >= AUTO_SAMPLE_DENSITY:
+        return AUTO_SAMPLE_ROUNDS
+    return 0
 
 
 def connected_components(
@@ -57,11 +86,20 @@ def connected_components(
     The frontier engine's shrink loop is host-driven, so inside a
     ``jax.jit`` trace the auto path falls back to the (fully traceable)
     dense ``sv_run`` loop.
+
+    On the auto path, edge-heavy graphs (>= ``AUTO_SAMPLE_DENSITY``
+    input edges per node) enable the Afforest sampling pre-pass
+    automatically (``AUTO_SAMPLE_ROUNDS`` rounds): labels stay a correct
+    partition but representatives may differ from the dense engine's;
+    pass ``sample_rounds=`` explicitly (0 disables) or pin ``engine=``
+    to opt out. ``record_hooks=True`` works on every engine and appends
+    the spanning-forest hook record (see ``repro.trees``).
     """
     import jax
 
     from repro.compat import is_tracer
 
+    check_choice("engine", engine, _CC_ENGINES)
     single_kw = _SINGLE_KW & kwargs.keys()
     sharded_kw = _SHARDED_KW & kwargs.keys()
     if single_kw and (sharded_kw or mesh is not None):
@@ -81,6 +119,10 @@ def connected_components(
             engine = "_sharded"
         else:
             engine = "dense" if tracing else "frontier"
+        if engine == "frontier" and "sample_rounds" not in kwargs:
+            auto_k = _auto_sample_rounds(src, num_nodes)
+            if auto_k:
+                kwargs["sample_rounds"] = auto_k
     if engine == "frontier":
         if sharded_kw:
             raise ValueError(
@@ -114,8 +156,6 @@ def connected_components(
             return shiloach_vishkin(
                 src, dst, num_nodes, max_rounds=max_rounds, **kwargs
             )
-    elif engine != "_sharded":
-        raise ValueError(f"unknown engine {engine!r}")
     # multi-device (or sharded knobs): the sharded engine IS the dense walk
     from repro.distributed.graph import sharded_shiloach_vishkin
 
@@ -136,10 +176,16 @@ def list_rank(succ, num_splitters=None, *, mesh=None, **kwargs):
     count, so the same call behaves identically on any machine;
     combining it WITH a mesh raises. ``kernel_impl`` is honoured by BOTH
     engines (the sharded engine routes its RS4/RS5 phases through the
-    same Pallas kernels).
+    same Pallas kernels); unknown strings raise naming the choices.
     """
     import jax
 
+    from repro.core.list_ranking import KERNEL_IMPLS, PACK_MODES
+
+    if "kernel_impl" in kwargs:
+        check_choice("kernel_impl", kwargs["kernel_impl"], KERNEL_IMPLS)
+    if "pack_mode" in kwargs:
+        check_choice("pack_mode", kwargs["pack_mode"], PACK_MODES)
     single_only = _SINGLE_ENGINE_KW & kwargs.keys()
     if mesh is not None or (jax.device_count() > 1 and not single_only):
         if single_only:
@@ -155,9 +201,47 @@ def list_rank(succ, num_splitters=None, *, mesh=None, **kwargs):
     return random_splitter_rank(succ, num_splitters, **kwargs)
 
 
+def spanning_forest(src, dst, num_nodes, **kwargs):
+    """Spanning forest from CC hook decisions -- see
+    ``repro.trees.spanning_forest`` (engine dispatch as above)."""
+    from repro.trees import spanning_forest as _sf
+
+    return _sf(src, dst, num_nodes, **kwargs)
+
+
+def euler_tour(edge_u, edge_v, num_nodes, **kwargs):
+    """Euler tour of a spanning forest -- see ``repro.trees.euler_tour``;
+    the returned tour's ``succ`` feeds ``list_rank``/``wylie_rank``."""
+    from repro.trees import euler_tour as _et
+
+    return _et(edge_u, edge_v, num_nodes, **kwargs)
+
+
+def root_tree(tour, **kwargs):
+    """Parent array of a toured forest -- see ``repro.trees.root_tree``;
+    ``rank_engine=``/``kernel_impl=``/``mesh=`` dispatch the underlying
+    list ranking exactly like ``list_rank``."""
+    from repro.trees import root_tree as _rt
+
+    return _rt(tour, **kwargs)
+
+
+def tree_analytics(src, dst, num_nodes, **kwargs):
+    """One-shot graph -> forest -> tour -> tree computations pipeline --
+    see ``repro.trees.tree_analytics``."""
+    from repro.trees import tree_analytics as _ta
+
+    return _ta(src, dst, num_nodes, **kwargs)
+
+
 __all__ = [
     "connected_components",
     "list_rank",
+    "spanning_forest",
+    "euler_tour",
+    "root_tree",
+    "tree_analytics",
+    "check_choice",
     "wylie_rank",
     "random_splitter_rank",
     "select_splitters",

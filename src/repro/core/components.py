@@ -55,6 +55,49 @@ def _identity_merge(arr, base, aux, s):
     return arr, aux
 
 
+def check_choice(kind: str, value, choices) -> None:
+    """Reject unknown dispatch strings loudly, naming the valid set.
+
+    Shared by every ``engine=`` / ``kernel_impl=`` / ``hook_impl=``
+    switch so a typo fails at the call site instead of silently falling
+    through to a default path."""
+    if value not in choices:
+        raise ValueError(
+            f"unknown {kind} {value!r}; valid choices: "
+            + ", ".join(repr(c) for c in choices)
+        )
+
+
+HOOK_IMPLS = ("xla", "auto", "pallas", "pallas_interpret")
+
+
+def _lift_merge(fn):
+    """Adapt an engine merge fn (which owns only its engine aux) to the
+    nested ``(hooks, engine_aux)`` aux used when ``record_hooks`` is on,
+    so no engine's merge functions need to know about hook recording."""
+
+    def lifted(arr, base, aux, s):
+        hooks, inner = aux
+        arr, inner = fn(arr, base, inner, s)
+        return arr, (hooks, inner)
+
+    return lifted
+
+
+def init_hooks(n: int):
+    """Fresh hook-recording state: ``(hook_u, hook_v)``, sentinel ``n``.
+
+    Slot r holds the endpoints of the graph edge that won the min-CRCW
+    hook of tree r (the round r's label slot changed), or ``n`` if tree
+    r never hooked (component roots). Each slot hooks at most once over
+    a whole run -- once D[r] drops below r, no node carries label r
+    again after the round's short-cuts -- so the arrays are write-once
+    and the recorded pairs form a spanning forest: one edge per hook
+    event, hooks always point label-decreasing (acyclic), and a
+    component of size c hooks exactly c - 1 times."""
+    return jnp.full((n,), n, jnp.int32), jnp.full((n,), n, jnp.int32)
+
+
 def _hook_phase_fns(a: Array, b: Array, n: int, hook_impl: str):
     """SV2/SV3 hook phases over the edge arrays: either inline XLA
     gathers + min-scatters, or the fused ``kernels/edge_hook`` Pallas
@@ -109,6 +152,8 @@ def sv_round_fns(
     merge_stamps=None,
     hook_impl: str = "xla",
     with_frontier: bool = False,
+    record_hooks: bool = False,
+    merge_hooks=None,
 ):
     """Build the SV1a..SV5 round body over edge arrays ``(a, b)``.
 
@@ -125,10 +170,55 @@ def sv_round_fns(
     extra edge passes on the XLA path. The Pallas hook kernel doesn't
     export its compare mask, so that path recomputes the mask post-round
     (one extra pass).
+
+    ``record_hooks=True`` records, for every hook event, the graph edge
+    that won the min-CRCW scatter (the spanning-forest by-product the
+    ``repro.trees`` subsystem consumes). The aux slot then carries
+    ``((hook_u, hook_v), engine_aux)`` -- see ``init_hooks`` -- and
+    ``merge_labels``/``merge_stamps`` are lifted automatically to their
+    engine_aux component, so engines opt in without changing their merge
+    functions. Recording only READS the label/stamp state (after each
+    phase's merge) and writes the side arrays, so labels, stamps, and
+    round counts are bit-identical with recording on or off, on every
+    engine, by construction. ``merge_hooks`` is the cross-replica
+    reduction for the candidate arrays (identity on a single device,
+    pmin in the sharded engine); it runs twice per phase -- once to
+    agree on the winning ``u``, once for the matching ``v`` -- so the
+    recorded pair is a real edge even when the winner is on another
+    device's shard.
     """
     ml = merge_labels if merge_labels is not None else _identity_merge
     mq = merge_stamps if merge_stamps is not None else _identity_merge
+    if record_hooks:
+        ml, mq = _lift_merge(ml), _lift_merge(mq)
+    mh = merge_hooks if merge_hooks is not None else (lambda arr: arr)
     sv2_hook, sv3_hook = _hook_phase_fns(a, b, n, hook_impl)
+
+    def record_phase(hooks, cond, tgt, val, D_before, D_after):
+        """Record the winning edge of every slot this phase hooked.
+
+        A slot r hooked iff its merged label changed; the winners are
+        the edges that (a) satisfied the phase's hook condition, (b)
+        targeted r, and (c) wrote exactly the value that survived the
+        min. Ties (several edges writing the min label) break to the
+        lexicographically smallest (u, v): one min-scatter picks u, a
+        second -- conditioned on the merged u -- picks its v, which
+        keeps the pair an actual edge and makes the recorded forest
+        deterministic and engine-independent."""
+        hook_u, hook_v = hooks
+        tc = jnp.minimum(tgt, n - 1)  # clamped: non-winners masked below
+        hooked = D_after[tc] != D_before[tc]
+        win = cond & (val == D_after[tc]) & hooked
+        cu = jnp.full((n,), n, jnp.int32).at[
+            jnp.where(win, tgt, n)
+        ].min(a, mode="drop")
+        cu = mh(cu)
+        win_v = win & (a == cu[tc])
+        cv = jnp.full((n,), n, jnp.int32).at[
+            jnp.where(win_v, tgt, n)
+        ].min(b, mode="drop")
+        cv = mh(cv)
+        return jnp.where(cu < n, cu, hook_u), jnp.where(cv < n, cv, hook_v)
 
     def round_body(carry):
         if with_frontier:
@@ -147,9 +237,27 @@ def sv_round_fns(
         D2, Q = sv2_hook(D1, D, Q, s)
         D2, aux = ml(D2, D1, aux, s)
         Q, aux = mq(Q, q_base, aux, s)
+        if record_hooks:
+            hooks, inner = aux
+            Da, Db = D1[a], D1[b]
+            cond2 = jnp.logical_and(Da == D[a], Db < Da)
+            hooks = record_phase(
+                hooks, cond2, jnp.where(cond2, Da, n), Db, D1, D2
+            )
+            aux = (hooks, inner)
 
         D3, fmask = sv3_hook(D2, Q, s)
         D3, aux = ml(D3, D2, aux, s)
+        if record_hooks:
+            hooks, inner = aux
+            Da3, Db3 = D2[a], D2[b]
+            cond3 = (
+                (Q[Da3] < s) & (D2[Da3] == Da3) & (Da3 != Db3)
+            )
+            hooks = record_phase(
+                hooks, cond3, jnp.where(cond3, Da3, n), Db3, D2, D3
+            )
+            aux = (hooks, inner)
 
         # SV4: short-cut again.
         D4 = D3[D3]
@@ -183,6 +291,8 @@ def sv_run(
     hook_impl: str = "xla",
     aux0=None,
     return_aux: bool = False,
+    record_hooks: bool = False,
+    merge_hooks=None,
 ):
     """The SV0..SV5 round loop over edge arrays (a, b).
 
@@ -195,14 +305,22 @@ def sv_run(
     engines stay bit-identical -- a min-scatter distributes over
     edge-shard unions, so inserting the merges at these two points
     changes who walks each edge and nothing else.
+
+    ``record_hooks=True`` additionally returns the ``(hook_u, hook_v)``
+    winning-hook-edge arrays (see ``init_hooks``; ``merge_hooks`` is
+    their cross-replica pmin in the sharded engine) right after the
+    rounds, i.e. the return becomes ``(D, rounds, hooks[, aux])``.
     """
     # SV0: D(0)[j] = j, Q[j] = 0
     D0 = jnp.arange(n, dtype=jnp.int32)
     Q0 = jnp.zeros(n, jnp.int32)
     aux = aux0 if aux0 is not None else jnp.int32(0)
+    if record_hooks:
+        aux = (init_hooks(n), aux)
 
     round_body = sv_round_fns(
-        a, b, n, merge_labels, merge_stamps, hook_impl=hook_impl
+        a, b, n, merge_labels, merge_stamps, hook_impl=hook_impl,
+        record_hooks=record_hooks, merge_hooks=merge_hooks,
     )
 
     def cond(carry):
@@ -213,9 +331,13 @@ def sv_run(
         cond, round_body, (D0, Q0, aux, jnp.int32(1), jnp.bool_(True))
     )
     D = sv_compress(D, n)
+    out = (D, s - 1)
+    if record_hooks:
+        hooks, aux = aux
+        out = out + (hooks,)
     if return_aux:
-        return D, s - 1, aux
-    return D, s - 1
+        out = out + (aux,)
+    return out
 
 
 def dedup_edges(
@@ -250,11 +372,17 @@ def _maybe_dedup(src, dst, dedup: bool):
     return dedup_edges(src, dst)
 
 
-@partial(jax.jit, static_argnames=("num_nodes", "bound", "hook_impl"))
-def _sv_dense(src, dst, num_nodes, bound, hook_impl):
+@partial(
+    jax.jit,
+    static_argnames=("num_nodes", "bound", "hook_impl", "record_hooks"),
+)
+def _sv_dense(src, dst, num_nodes, bound, hook_impl, record_hooks=False):
     a = jnp.concatenate([src, dst]).astype(jnp.int32)
     b = jnp.concatenate([dst, src]).astype(jnp.int32)
-    return sv_run(a, b, num_nodes, bound, hook_impl=hook_impl)
+    return sv_run(
+        a, b, num_nodes, bound, hook_impl=hook_impl,
+        record_hooks=record_hooks,
+    )
 
 
 def shiloach_vishkin(
@@ -265,7 +393,8 @@ def shiloach_vishkin(
     max_rounds: int | None = None,
     dedup: bool = True,
     hook_impl: str = "xla",
-) -> tuple[Array, Array]:
+    record_hooks: bool = False,
+):
     """Connected components. Edges are treated as undirected (both
     orientations are processed, matching the paper's 2m edge walk);
     self-loops and duplicate edges in host-side (numpy) inputs are
@@ -274,11 +403,18 @@ def shiloach_vishkin(
     and can be pre-cleaned with ``dedup_edges``).
 
     Returns (labels, rounds). labels[i] is the component root id.
+    ``record_hooks=True`` appends the spanning-forest hook record
+    ``(hook_u, hook_v)`` (see ``init_hooks``) without changing labels
+    or round counts; ``repro.trees.spanning_forest`` is the consumer.
     """
     n = num_nodes
+    check_choice("hook_impl", hook_impl, HOOK_IMPLS)
     bound = max_rounds if max_rounds is not None else sv_round_bound(n)
     src, dst = _maybe_dedup(src, dst, dedup)
-    return _sv_dense(jnp.asarray(src), jnp.asarray(dst), n, bound, hook_impl)
+    return _sv_dense(
+        jnp.asarray(src), jnp.asarray(dst), n, bound, hook_impl,
+        record_hooks,
+    )
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))

@@ -44,7 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.components import (
+    HOOK_IMPLS,
     _maybe_dedup,
+    check_choice,
+    init_hooks,
     sv_compress,
     sv_round_bound,
     sv_round_fns,
@@ -79,35 +82,47 @@ def _next_pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length() if x > 0 else 1
 
 
-@partial(jax.jit, static_argnames=("n", "bound", "shrink_at", "hook_impl"))
-def _run_level(a, b, D, Q, s, *, n, bound, shrink_at, hook_impl):
+@partial(
+    jax.jit,
+    static_argnames=("n", "bound", "shrink_at", "hook_impl", "record_hooks"),
+)
+def _run_level(a, b, D, Q, s, aux, *, n, bound, shrink_at, hook_impl,
+               record_hooks=False):
     """Run SV rounds at one fixed buffer size until convergence, the
     round bound, or (when ``shrink_at`` is set) the frontier mask drops
     to half the buffer -- whichever comes first. The mask is the round
     body's own SV3 compare (``with_frontier=True``), so watching it
     costs no extra edge passes; it is a superset of the truly-live
-    edges, which only delays a shrink, never breaks one."""
-    body = sv_round_fns(a, b, n, hook_impl=hook_impl, with_frontier=True)
+    edges, which only delays a shrink, never breaks one. ``aux`` (the
+    hook-recording state when ``record_hooks``) is node-indexed, so it
+    threads through level changes untouched by compaction."""
+    body = sv_round_fns(a, b, n, hook_impl=hook_impl, with_frontier=True,
+                        record_hooks=record_hooks)
     m = a.shape[0]
 
     def wrapped(carry):
-        D, Q, s, changed, fmask, rounds = carry
-        D, Q, _aux, s, changed, fmask = body(
-            (D, Q, jnp.int32(0), s, changed, fmask)
+        D, Q, aux, s, changed, fmask, rounds = carry
+        D, Q, aux, s, changed, fmask = body(
+            (D, Q, aux, s, changed, fmask)
         )
-        return D, Q, s, changed, fmask, rounds + 1
+        return D, Q, aux, s, changed, fmask, rounds + 1
 
     def cond(carry):
-        _D, _Q, s, changed, fmask, _rounds = carry
+        _D, _Q, _aux, s, changed, fmask, _rounds = carry
         keep = jnp.logical_and(changed, s <= bound)
         if shrink_at is not None:
             live = jnp.sum(fmask.astype(jnp.int32))  # elementwise only
             keep = jnp.logical_and(keep, live > shrink_at)
         return keep
 
-    init = (D, Q, s, jnp.bool_(True), jnp.ones((m,), jnp.bool_), jnp.int32(0))
-    D, Q, s, changed, fmask, rounds = jax.lax.while_loop(cond, wrapped, init)
-    return D, Q, s, changed, fmask, rounds
+    init = (
+        D, Q, aux, s, jnp.bool_(True), jnp.ones((m,), jnp.bool_),
+        jnp.int32(0),
+    )
+    D, Q, aux, s, changed, fmask, rounds = jax.lax.while_loop(
+        cond, wrapped, init
+    )
+    return D, Q, aux, s, changed, fmask, rounds
 
 
 @partial(jax.jit, static_argnames=("size",))
@@ -131,15 +146,16 @@ def _build_samples(a, b, perm, *, n, k):
     return tbl.at[a[perm], slot].set(b[perm])
 
 
-@partial(jax.jit, static_argnames=("n",))
-def _sample_round(neigh, D, Q, s, *, n):
+@partial(jax.jit, static_argnames=("n", "record_hooks"))
+def _sample_round(neigh, D, Q, s, aux, *, n, record_hooks=False):
     """One SV round hooking every node through one sampled neighbor;
-    nodes without a sample become inert self-loops."""
+    nodes without a sample become inert self-loops. Sampled arcs are
+    real graph edges, so hook recording stays valid in the pre-pass."""
     sa = jnp.arange(n, dtype=jnp.int32)
     sb = jnp.where(neigh >= 0, neigh, sa)
-    body = sv_round_fns(sa, sb, n)
-    D, Q, _aux, s, changed = body((D, Q, jnp.int32(0), s, jnp.bool_(True)))
-    return D, Q, s, changed
+    body = sv_round_fns(sa, sb, n, record_hooks=record_hooks)
+    D, Q, aux, s, changed = body((D, Q, aux, s, jnp.bool_(True)))
+    return D, Q, aux, s, changed
 
 
 @partial(jax.jit, static_argnames=("n",))
@@ -159,6 +175,7 @@ def frontier_shiloach_vishkin(
     min_bucket: int = 1024,
     hook_impl: str = "xla",
     seed: int = 0,
+    record_hooks: bool = False,
     with_stats: bool = False,
 ):
     """Connected components over a shrinking active-edge frontier.
@@ -170,8 +187,16 @@ def frontier_shiloach_vishkin(
     ``with_stats`` -- ``stats.edges_touched`` counts every edge slot
     walked by a round plus one buffer pass per compaction/sampling,
     the number the dense engine pays ``2m * rounds`` for.
+
+    ``record_hooks=True`` inserts the spanning-forest hook record
+    ``(hook_u, hook_v)`` after rounds in the return tuple (labels AND
+    round counts stay bit-identical -- recording only reads the round
+    state). Compaction cannot drop a future winner: a winning edge has
+    differently-labeled endpoints at hook time, label equality is
+    permanent, and the frontier mask keeps every unequal-label edge.
     """
     n = num_nodes
+    check_choice("hook_impl", hook_impl, HOOK_IMPLS)
     src, dst = _maybe_dedup(src, dst, dedup)
     src = jnp.asarray(src, jnp.int32).ravel()
     dst = jnp.asarray(dst, jnp.int32).ravel()
@@ -184,6 +209,7 @@ def frontier_shiloach_vishkin(
     D = jnp.arange(n, dtype=jnp.int32)
     Q = jnp.zeros(n, jnp.int32)
     s = jnp.int32(1)
+    aux = (init_hooks(n), jnp.int32(0)) if record_hooks else jnp.int32(0)
     stats = FrontierStats(rounds=0, edges_touched=0, m2=m2,
                           sample_rounds=sample_rounds)
 
@@ -193,7 +219,9 @@ def frontier_shiloach_vishkin(
         samples = _build_samples(a, b, perm, n=n, k=sample_rounds)
         stats.edges_touched += m2  # the sampling pass streams all edges once
         for t in range(sample_rounds):
-            D, Q, s, _changed = _sample_round(samples[:, t], D, Q, s, n=n)
+            D, Q, aux, s, _changed = _sample_round(
+                samples[:, t], D, Q, s, aux, n=n, record_hooks=record_hooks
+            )
             stats.edges_touched += 2 * n  # SV2 + SV3 over the n sampled edges
         if with_stats:  # O(n) scatter + host sync: only when asked for
             stats.largest_component_frac = float(
@@ -218,9 +246,10 @@ def frontier_shiloach_vishkin(
             None if (m2_level <= min_bucket or force_converge)
             else m2_level // 2
         )
-        D, Q, s, changed, fmask, rounds = _run_level(
-            a, b, D, Q, s,
+        D, Q, aux, s, changed, fmask, rounds = _run_level(
+            a, b, D, Q, s, aux,
             n=n, bound=bound, shrink_at=shrink_at, hook_impl=hook_impl,
+            record_hooks=record_hooks,
         )
         # SV2 + SV3 passes; the Pallas hook kernel doesn't export its
         # compare mask, so that path pays a third (mask) pass per round.
@@ -245,6 +274,10 @@ def frontier_shiloach_vishkin(
     D = sv_compress(D, n)
     rounds_total = int(s) - 1
     stats.rounds = rounds_total
+    out = (D, jnp.int32(rounds_total))
+    if record_hooks:
+        hooks, _inner = aux
+        out = out + (hooks,)
     if with_stats:
-        return D, jnp.int32(rounds_total), stats
-    return D, jnp.int32(rounds_total)
+        out = out + (stats,)
+    return out

@@ -30,10 +30,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.components import check_choice
 from repro.core.pram import lockstep_walk
 from repro.ops.kiss import KissRng
 
 Array = jax.Array
+
+PACK_MODES = ("aos", "soa", "word64")
+KERNEL_IMPLS = ("auto", "xla", "pallas", "pallas_interpret")
 
 
 def max_splitters_for_linear_work(n: int) -> int:
@@ -58,6 +62,7 @@ def wylie_rank(
     lane = jnp.arange(n, dtype=succ.dtype)
     rank0 = (succ != lane).astype(jnp.int32)
 
+    check_choice("pack_mode", pack_mode, ("aos", "soa"))
     if pack_mode == "soa":
 
         def body(_, st):
@@ -80,7 +85,7 @@ def wylie_rank(
         packed = jax.lax.fori_loop(0, iters, body, packed0)
         return packed[:, 0]
 
-    raise ValueError(f"unknown pack_mode {pack_mode!r}")
+    raise AssertionError("unreachable: pack_mode validated above")
 
 
 # ---------------------------------------------------------------------------
@@ -259,26 +264,26 @@ def _random_splitter_core(
     is_term = spsucc == lanes
     w_adj = final["dist"] - is_term.astype(jnp.int32)
     iters = max(1, math.ceil(math.log2(max(p, 2))))
-    if kernel_impl == "pallas":
+    if kernel_impl != "xla":
         from repro.kernels.pointer_jump.ops import pointer_jump
 
         r, nxt_final = pointer_jump(
             spsucc, jnp.where(is_term, 0, w_adj),
-            iters=iters, impl="pallas",
+            iters=iters, impl=kernel_impl,
         )
         rank_sp = r + w_adj[nxt_final]
     else:
         rank_sp = _splitter_list_rank(w_adj, spsucc, iters)
 
     # --- RS5: streaming aggregation (coalesced: pure striding access) ----
-    if kernel_impl == "pallas":
+    if kernel_impl != "xla":
         from repro.kernels.splitter_aggregate.ops import splitter_aggregate
 
         if pack_mode == "soa":
             packed_rs5 = jnp.stack([local, owner], axis=-1)
         else:
             packed_rs5 = jnp.stack([packed[:, 0], packed[:, 1]], axis=-1)
-        rank = splitter_aggregate(packed_rs5, rank_sp, impl="pallas")
+        rank = splitter_aggregate(packed_rs5, rank_sp, impl=kernel_impl)
     elif pack_mode == "soa":
         rank = rank_sp[owner] - local
     else:
@@ -300,7 +305,20 @@ def random_splitter_rank(
     kernel_impl: str = "xla",
     with_stats: bool = False,
 ):
-    """Rank a linked list with Reid-Miller's random splitter algorithm."""
+    """Rank a linked list with Reid-Miller's random splitter algorithm.
+
+    ``kernel_impl`` routes the RS4/RS5 phases through the Pallas
+    kernels: "auto" compiles them on a real TPU backend and keeps plain
+    XLA elsewhere; "pallas"/"pallas_interpret" force the kernel path
+    (interpreted off-TPU). Unknown strings raise (they used to fall
+    through to the XLA path silently).
+    """
+    from repro.kernels import on_tpu
+
+    check_choice("pack_mode", pack_mode, PACK_MODES)
+    check_choice("kernel_impl", kernel_impl, KERNEL_IMPLS)
+    if kernel_impl == "auto":
+        kernel_impl = "pallas" if on_tpu() else "xla"
     succ = jnp.asarray(succ)
     n = int(succ.shape[0])
     if splitters is None:

@@ -152,6 +152,49 @@ def sampled_minibatch(
     }
 
 
+def random_tree(n: int, seed: int = 0) -> np.ndarray:
+    """Edge list (n-1, 2) of a uniform-attachment random tree.
+
+    Node i > 0 attaches to a KISS-uniform earlier node, then the whole
+    tree is KISS-relabeled so node ids carry no structure (the
+    ``repro.trees`` input family: expected depth O(log n), arbitrary
+    branching, unlike the balanced ``ops/kiss.tree_graph``).
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    rng = KissRng(seed, n_streams=min(max(n, 1), 8192))
+    if n == 1:
+        return np.zeros((0, 2), np.int32)
+    draws = rng.uniform_ints((n - 1,), 1 << 31)
+    child = np.arange(1, n, dtype=np.int64)
+    parent = draws % child  # uniform in [0, i) for node i
+    keys = rng.uniform_ints((n,), 1 << 31)
+    relabel = np.argsort(keys, kind="stable").astype(np.int32)
+    return np.stack([relabel[parent], relabel[child]], axis=1).astype(np.int32)
+
+
+def random_tree_forest(
+    n: int, num_trees: int, seed: int = 0
+) -> np.ndarray:
+    """Edge list of ``num_trees`` disjoint uniform-attachment random
+    trees over n nodes (KISS-random node partition): the batched
+    many-small-trees workload ``repro.trees`` serves in one padded tour.
+    """
+    rng = KissRng(seed, n_streams=min(max(n, 1), 8192))
+    keys = rng.uniform_ints((n,), 1 << 31)
+    order = np.argsort(keys, kind="stable")
+    pieces = np.array_split(order, max(num_trees, 1))
+    edges = []
+    for ci, nodes in enumerate(pieces):
+        if len(nodes) < 2:
+            continue
+        local = random_tree(len(nodes), seed=seed * 7919 + ci + 1)
+        edges.append(nodes[local])
+    if not edges:
+        return np.zeros((0, 2), np.int32)
+    return np.concatenate(edges, axis=0).astype(np.int32)
+
+
 def random_succ(n: int, seed: int = 0) -> np.ndarray:
     """Random linked-list succ[] with head 0 and self-loop terminal.
 

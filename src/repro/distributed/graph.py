@@ -60,8 +60,14 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.components import _maybe_dedup, sv_round_bound, sv_run
+from repro.core.components import (
+    _maybe_dedup,
+    check_choice,
+    sv_round_bound,
+    sv_run,
+)
 from repro.core.list_ranking import (
+    KERNEL_IMPLS,
     SplitterStats,
     _splitter_list_rank,
     aos_walk_fns,
@@ -195,11 +201,12 @@ def _sparse_merge_fns(axis, n, capacity):
 @partial(
     jax.jit,
     static_argnames=(
-        "num_nodes", "max_rounds", "mesh", "axis", "exchange", "capacity"
+        "num_nodes", "max_rounds", "mesh", "axis", "exchange", "capacity",
+        "record_hooks",
     ),
 )
 def _sharded_sv(a, b, *, num_nodes, max_rounds, mesh, axis, exchange,
-                capacity):
+                capacity, record_hooks=False):
     n = num_nodes
     bound = max_rounds if max_rounds is not None else sv_round_bound(n)
 
@@ -217,17 +224,26 @@ def _sharded_sv(a, b, *, num_nodes, max_rounds, mesh, axis, exchange,
         else:
             ml, mq = _dense_merge_fns(axis, n)
         aux0 = (jnp.zeros(bound + 2, jnp.int32), jnp.zeros(bound + 2, jnp.int32))
+        # Hook recording merges with pmin: candidate winning-edge arrays
+        # use sentinel n, so the per-phase two-step (u then v) pmin
+        # reconstructs the lexicographically-min global winner even when
+        # the winning edge lives on another device's shard.
+        mh = (lambda arr: jax.lax.pmin(arr, axis)) if record_hooks else None
         return sv_run(
             a_loc, b_loc, n, bound,
             merge_labels=ml, merge_stamps=mq,
             aux0=aux0, return_aux=True,
+            record_hooks=record_hooks, merge_hooks=mh,
         )
 
+    out_specs = (P(), P(), (P(), P()))
+    if record_hooks:
+        out_specs = (P(), P(), (P(), P()), (P(), P()))
     return compat.shard_map(
         block,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
-        out_specs=(P(), P(), (P(), P())),
+        out_specs=out_specs,
         check_vma=False,
     )(a, b)
 
@@ -265,6 +281,7 @@ def sharded_shiloach_vishkin(
     exchange: str = "dense",
     sparse_capacity: int | None = None,
     dedup: bool = True,
+    record_hooks: bool = False,
     with_stats: bool = False,
 ):
     """Multi-device connected components; bit-exact vs single-device.
@@ -275,10 +292,12 @@ def sharded_shiloach_vishkin(
     sends only the (index, label) pairs each device changed (capacity
     ``sparse_capacity``, default n/8, dense fallback on overflow) --
     bit-exact either way. Returns (labels, rounds) exactly like
-    ``shiloach_vishkin``, plus a ``CCExchangeStats`` when ``with_stats``.
+    ``shiloach_vishkin``, plus the ``(hook_u, hook_v)`` spanning-forest
+    record when ``record_hooks`` (labels/rounds unchanged; the hook
+    arrays are pmin-merged so they match the single-device record
+    bit-exactly), plus a ``CCExchangeStats`` when ``with_stats``.
     """
-    if exchange not in ("dense", "sparse"):
-        raise ValueError(f"unknown exchange {exchange!r}")
+    check_choice("exchange", exchange, ("dense", "sparse"))
     mesh = mesh if mesh is not None else graph_mesh(axis=axis)
     axis = _resolve_axis(mesh, axis)
     nd = mesh.shape[axis]
@@ -296,12 +315,19 @@ def sharded_shiloach_vishkin(
         sparse_capacity if sparse_capacity is not None
         else default_sparse_capacity(num_nodes)
     )
-    labels, rounds, (words, frontier) = _sharded_sv(
+    res = _sharded_sv(
         a, b, num_nodes=num_nodes, max_rounds=max_rounds, mesh=mesh,
         axis=axis, exchange=exchange, capacity=capacity,
+        record_hooks=record_hooks,
     )
+    if record_hooks:
+        labels, rounds, hooks, (words, frontier) = res
+        out = (labels, rounds, hooks)
+    else:
+        labels, rounds, (words, frontier) = res
+        out = (labels, rounds)
     if not with_stats:
-        return labels, rounds
+        return out
     r = int(rounds)
     stats = CCExchangeStats(
         words_per_round=np.asarray(words)[1 : r + 1],
@@ -309,7 +335,7 @@ def sharded_shiloach_vishkin(
         exchange=exchange,
         capacity=capacity if exchange == "sparse" else None,
     )
-    return labels, rounds, stats
+    return out + (stats,)
 
 
 def cc_exchange_words_per_round(
@@ -468,10 +494,9 @@ def sharded_random_splitter_rank(
     """
     from repro.kernels import on_tpu
 
+    check_choice("kernel_impl", kernel_impl, KERNEL_IMPLS)
     if kernel_impl == "auto":
         kernel_impl = "pallas" if on_tpu() else "xla"
-    if kernel_impl not in ("xla", "pallas", "pallas_interpret"):
-        raise ValueError(f"unknown kernel_impl {kernel_impl!r}")
     mesh = mesh if mesh is not None else graph_mesh(axis=axis)
     axis = _resolve_axis(mesh, axis)
     nd = mesh.shape[axis]

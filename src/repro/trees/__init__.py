@@ -1,0 +1,56 @@
+"""Euler-tour tree analytics: list ranking and connectivity, composed.
+
+The paper's stated reason list ranking matters is the Euler-tour
+technique for parallel tree computations; this package closes that loop
+with three layers built entirely from primitives the repo already
+trusts:
+
+1. **forest** -- a spanning forest extracted from the hook decisions of
+   Shiloach-Vishkin connected components (``record_hooks=True`` on any
+   CC engine: dense, frontier-compacted, or sharded), bit-neutral to
+   labels and round counts.
+2. **tour** -- the Euler tour of that forest, built by sorted adjacency
+   twinning (``ops/sorted_dispatch`` + ``ops/segment``): a successor
+   array that is a ready-made input to the list-ranking engines.
+3. **compute** -- tree computations (``root_tree``, ``depths``,
+   ``subtree_sizes``, ``preorder``/``postorder``) as +-1-weighted ranks
+   over the tour, dispatching through the same ``kernel_impl=`` /
+   engine plumbing as ``list_rank``; a whole forest of small trees runs
+   batched in one (optionally padded) tour.
+"""
+from repro.trees.forest import SpanningForest, spanning_forest
+from repro.trees.tour import EulerTour, euler_tour, tour_capacity
+from repro.trees.compute import (
+    RANK_ENGINES,
+    TreeAnalytics,
+    TreeComputations,
+    depths,
+    postorder,
+    preorder,
+    root_tree,
+    subtree_sizes,
+    tour_ranks,
+    tour_splitters,
+    tree_analytics,
+    tree_computations,
+)
+
+__all__ = [
+    "SpanningForest",
+    "spanning_forest",
+    "EulerTour",
+    "euler_tour",
+    "tour_capacity",
+    "RANK_ENGINES",
+    "TreeAnalytics",
+    "TreeComputations",
+    "tour_ranks",
+    "tour_splitters",
+    "tree_computations",
+    "tree_analytics",
+    "root_tree",
+    "depths",
+    "subtree_sizes",
+    "preorder",
+    "postorder",
+]

@@ -1,0 +1,156 @@
+"""Euler tour construction by sorted adjacency twinning (Tarjan-Vishkin).
+
+Each forest edge {u, v} becomes two arcs u->v and v->u (twins at a
+fixed stride, so twinning costs no search). Arcs are grouped by source
+with ONE stable sort (``ops/sorted_dispatch.sort_by_key``) and the
+per-node group extents come from the same segment machinery the GNN
+paths use (``grouped_offsets``). The tour successor of arc (u->v) is
+the arc after its twin (v->u) in v's circular adjacency -- one gather
+chain, no data-dependent control flow (guideline G3) -- which yields
+one Euler circuit per tree. Breaking each circuit at its root's first
+arc (terminal arcs become self-loops) produces exactly the linked-list
+shape ``wylie_rank`` / ``random_splitter_rank`` consume: the whole
+forest is ONE multi-list ranking instance, which is what makes batched
+many-small-trees workloads a single padded call.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ops.sorted_dispatch import grouped_offsets, sort_by_key
+
+Array = jax.Array
+
+
+@dataclass
+class EulerTour:
+    """A linearized Euler tour of a spanning forest, padded or exact.
+
+    ``succ`` is the tour successor over arc ids (terminal arcs and
+    padded slots are self-loops), ready for list ranking. ``valid``
+    masks the first ``num_arcs`` real arcs; padded tail slots are inert
+    self-loops at node 0 so every downstream op stays branch-free.
+    """
+
+    succ: Array  # (L,) int32 tour successor (self-loop terminals)
+    arc_src: Array  # (L,) int32 source node per arc
+    arc_dst: Array  # (L,) int32 destination node per arc
+    twin: Array  # (L,) int32 opposite-orientation arc (self for padding)
+    head_of_arc: Array  # (L,) int32 head arc of the arc's own tour
+    valid: Array  # (L,) bool, False on padded slots
+    num_arcs: int  # 2f real arcs (pre-padding)
+    num_nodes: int
+    labels: Array  # (n,) int32 component label per node
+    root_of: Array  # (n,) int32 tree root per node (= labels unless re-rooted)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.succ.shape[0])
+
+
+def tour_capacity(num_edges: int, min_capacity: int = 16) -> int:
+    """Power-of-two arc capacity covering a forest of ``num_edges``
+    edges: the padded-batch convention (one compiled shape serves every
+    request below the capacity)."""
+    need = max(2 * num_edges, min_capacity)
+    return 1 << (need - 1).bit_length()
+
+
+@partial(jax.jit, static_argnames=("n", "f", "pad"))
+def _build_tour(u, v, root_of, *, n, f, pad):
+    L2 = 2 * f
+    asrc = jnp.concatenate([u, v]).astype(jnp.int32)
+    adst = jnp.concatenate([v, u]).astype(jnp.int32)
+    ids = jnp.arange(L2, dtype=jnp.int32)
+    twin = (ids + f) % L2
+
+    # Group arcs by source: ONE stable sort + segment counts.
+    sorted_src, perm = sort_by_key(asrc)
+    inv = jnp.zeros((L2,), jnp.int32).at[perm].set(ids)
+    counts, offsets = grouped_offsets(sorted_src, n)
+
+    # succ(u->v) = the arc after twin (v->u) in v's circular adjacency.
+    tpos = inv[twin]
+    grp_end = offsets[adst] + counts[adst]
+    nxt_pos = jnp.where(tpos + 1 < grp_end, tpos + 1, offsets[adst])
+    succ = perm[nxt_pos]
+
+    # Linearize each circuit at its root's first arc. Any node of a
+    # nonempty tree has arcs, so offsets[root] is in range for every
+    # arc's root; the clamp only guards unused (isolated-root) lanes.
+    head_by_node = perm[jnp.minimum(offsets[root_of], L2 - 1)]
+    head_of_arc = head_by_node[asrc]
+    succ = jnp.where(succ == head_of_arc, ids, succ)
+
+    if pad > 0:
+        pad_ids = jnp.arange(L2, L2 + pad, dtype=jnp.int32)
+        succ = jnp.concatenate([succ, pad_ids])
+        twin = jnp.concatenate([twin, pad_ids])
+        head_of_arc = jnp.concatenate([head_of_arc, pad_ids])
+        asrc = jnp.concatenate([asrc, jnp.zeros((pad,), jnp.int32)])
+        adst = jnp.concatenate([adst, jnp.zeros((pad,), jnp.int32)])
+    valid = jnp.arange(L2 + pad, dtype=jnp.int32) < L2
+    return succ, asrc, adst, twin, head_of_arc, valid
+
+
+def euler_tour(
+    edge_u,
+    edge_v,
+    num_nodes: int,
+    *,
+    labels=None,
+    root: int | None = None,
+    pad_to: int | None = None,
+) -> EulerTour:
+    """Build the linearized Euler tour of a spanning forest.
+
+    ``edge_u``/``edge_v`` are the forest edges (e.g. from
+    ``spanning_forest``); passing a non-forest edge set is undefined.
+    ``labels`` are per-node component labels (computed with a dense CC
+    run over the forest when omitted); the label representative (min
+    node id) roots each tree, unless ``root=`` re-roots the single tree
+    containing it. ``pad_to`` pads the arc arrays to a fixed capacity
+    (inert self-loops) so many requests share one compiled shape --
+    see ``tour_capacity``.
+    """
+    n = num_nodes
+    u = jnp.asarray(edge_u, jnp.int32).ravel()
+    v = jnp.asarray(edge_v, jnp.int32).ravel()
+    f = int(u.shape[0])
+    L2 = 2 * f
+    cap = pad_to if pad_to is not None else L2
+    if cap < L2:
+        raise ValueError(f"pad_to={cap} below the {L2} arcs of the forest")
+
+    if labels is None:
+        from repro.core.components import shiloach_vishkin
+
+        labels, _ = shiloach_vishkin(u, v, n)
+    labels = jnp.asarray(labels, jnp.int32)
+    if root is not None:
+        root_of = jnp.where(labels == labels[root], jnp.int32(root), labels)
+    else:
+        root_of = labels
+
+    if f == 0:  # no edges: every node is its own (tour-less) tree
+        ids = jnp.arange(cap, dtype=jnp.int32)
+        zeros = jnp.zeros((cap,), jnp.int32)
+        return EulerTour(
+            succ=ids, arc_src=zeros, arc_dst=zeros, twin=ids,
+            head_of_arc=ids, valid=jnp.zeros((cap,), jnp.bool_),
+            num_arcs=0, num_nodes=n, labels=labels, root_of=root_of,
+        )
+
+    succ, asrc, adst, twin, head_of_arc, valid = _build_tour(
+        u, v, root_of, n=n, f=f, pad=cap - L2
+    )
+    return EulerTour(
+        succ=succ, arc_src=asrc, arc_dst=adst, twin=twin,
+        head_of_arc=head_of_arc, valid=valid,
+        num_arcs=L2, num_nodes=n, labels=labels, root_of=root_of,
+    )

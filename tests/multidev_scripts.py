@@ -284,5 +284,61 @@ def sharded_rank():
     print("MULTIDEV_OK")
 
 
+def sharded_trees():
+    import jax
+
+    from repro.core import shiloach_vishkin
+    from repro.distributed.graph import graph_mesh, sharded_shiloach_vishkin
+    from repro.trees import euler_tour, spanning_forest, tree_computations
+    from repro.trees.reference import serial_tree_reference
+    from repro.ops.kiss import giant_dust_graph, random_graph, tree_graph
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = graph_mesh(8)
+    cases = [
+        ("tree", 500, tree_graph(500, 3, seed=1)),
+        ("giant+dust", 600, giant_dust_graph(600, 0.9, seed=2)),
+        ("random", 400, random_graph(400, 0.02, seed=3)),
+    ]
+    for name, n, edges in cases:
+        # hook recording is neutral AND bit-identical to single-device
+        ref_lab, ref_rounds, (hu_ref, hv_ref) = shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, record_hooks=True
+        )
+        for exchange in ("dense", "sparse"):
+            lab, rounds, (hu, hv) = sharded_shiloach_vishkin(
+                edges[:, 0], edges[:, 1], n, mesh=mesh,
+                exchange=exchange, record_hooks=True,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(lab), np.asarray(ref_lab), err_msg=name
+            )
+            assert int(rounds) == int(ref_rounds), (name, exchange)
+            np.testing.assert_array_equal(
+                np.asarray(hu), np.asarray(hu_ref),
+                err_msg=f"{name}/{exchange}/hook_u",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(hv), np.asarray(hv_ref),
+                err_msg=f"{name}/{exchange}/hook_v",
+            )
+        # end-to-end: sharded CC forest + sharded splitter ranking
+        forest = spanning_forest(edges[:, 0], edges[:, 1], n, mesh=mesh)
+        tour = euler_tour(forest.edge_u, forest.edge_v, n,
+                          labels=forest.labels)
+        comp = tree_computations(tour, rank_engine="splitter", mesh=mesh)
+        ref = serial_tree_reference(forest.edge_u, forest.edge_v, n)
+        for k, attr in [
+            ("parent", "parent"), ("depth", "depth"),
+            ("subtree_size", "subtree_size"),
+            ("preorder", "preorder"), ("postorder", "postorder"),
+        ]:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(comp, attr)), ref[k],
+                err_msg=f"{name}/{k}",
+            )
+    print("MULTIDEV_OK")
+
+
 if __name__ == "__main__":
     globals()[sys.argv[1]]()

@@ -121,6 +121,50 @@ def test_dedup_edges():
         assert int(rounds) == 2
 
 
+def test_dedup_edges_degenerate_inputs():
+    # empty edge list
+    a, b = dedup_edges(np.zeros(0, np.int32), np.zeros(0, np.int32))
+    assert a.shape == (0,) and b.shape == (0,)
+    assert a.dtype == np.int32 and b.dtype == np.int32
+    lab, rounds = shiloach_vishkin(a, b, 4)
+    assert num_components(lab) == 4 and int(rounds) == 1
+    # all self-loops collapse to an empty walk
+    loops = np.arange(7, dtype=np.int32)
+    a, b = dedup_edges(loops, loops)
+    assert a.shape == (0,)
+    # n=1 single node, self-loop input
+    a, b = dedup_edges(np.zeros(1, np.int32), np.zeros(1, np.int32))
+    assert a.shape == (0,)
+    lab, rounds = shiloach_vishkin(a, b, 1)
+    assert num_components(lab) == 1 and int(rounds) == 1
+    # orientation + duplicates collapse to one canonical edge
+    a, b = dedup_edges(
+        np.array([2, 1, 1, 2], np.int32), np.array([1, 2, 2, 1], np.int32)
+    )
+    assert a.tolist() == [1] and b.tolist() == [2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 120), st.integers(0, 10_000))
+def test_dedup_never_changes_labels_or_rounds(n, m, seed):
+    r = np.random.default_rng(seed)
+    edges = r.integers(0, n, size=(m, 2)).astype(np.int32)
+    lab_raw, rounds_raw = shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, dedup=False
+    )
+    lab_dd, rounds_dd = shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, dedup=True
+    )
+    np.testing.assert_array_equal(np.asarray(lab_dd), np.asarray(lab_raw))
+    assert int(rounds_dd) == int(rounds_raw)
+    # the frontier engine agrees under dedup too
+    lab_f, rounds_f = frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, min_bucket=16
+    )
+    np.testing.assert_array_equal(np.asarray(lab_f), np.asarray(lab_raw))
+    assert int(rounds_f) == int(rounds_raw)
+
+
 def test_all_self_loops_single_round():
     e = np.stack([np.arange(6)] * 2, axis=1).astype(np.int32)
     lab, rounds = frontier_shiloach_vishkin(e[:, 0], e[:, 1], 6)
@@ -162,3 +206,61 @@ def test_connected_components_engine_dispatch():
     )
     np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
     assert int(rounds) == int(rounds_ref)
+
+
+def test_unknown_dispatch_strings_name_choices():
+    """Unknown engine=/kernel_impl=/hook_impl= strings raise loudly,
+    naming the valid set (they used to fall through silently)."""
+    edges = list_graph(60, 2, seed=11)
+    with pytest.raises(ValueError, match="'auto', 'frontier', 'dense'"):
+        connected_components(edges[:, 0], edges[:, 1], 60, engine="bogus")
+    with pytest.raises(ValueError, match="hook_impl.*'xla'"):
+        shiloach_vishkin(edges[:, 0], edges[:, 1], 60, hook_impl="bogus")
+    with pytest.raises(ValueError, match="hook_impl.*'pallas'"):
+        frontier_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], 60, hook_impl="pallas_typo"
+        )
+    from repro.distributed.graph import sharded_shiloach_vishkin
+
+    with pytest.raises(ValueError, match="exchange.*'dense', 'sparse'"):
+        sharded_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], 60, exchange="sparse_typo"
+        )
+
+
+def test_auto_sampling_policy_on_dense_graphs():
+    """ROADMAP decision: engine='auto' enables the Afforest pre-pass on
+    edge-heavy graphs (m/n >= AUTO_SAMPLE_DENSITY); labels remain a
+    correct partition, and sample_rounds=0 opts out bit-exactly."""
+    from repro.core import AUTO_SAMPLE_DENSITY
+
+    n = 300
+    m = int(AUTO_SAMPLE_DENSITY * n) + 10
+    r = np.random.default_rng(12)
+    edges = r.integers(0, n, size=(m, 2)).astype(np.int32)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    # auto: pre-pass on -> partition-correct labels
+    lab, _rounds = connected_components(edges[:, 0], edges[:, 1], n)
+    np.testing.assert_array_equal(
+        canonicalize_labels(np.asarray(lab)),
+        canonicalize_labels(np.asarray(ref)),
+    )
+    # explicit sample_rounds=0 overrides the policy: bit-exact vs dense
+    lab0, rounds0 = connected_components(
+        edges[:, 0], edges[:, 1], n, sample_rounds=0
+    )
+    np.testing.assert_array_equal(np.asarray(lab0), np.asarray(ref))
+    assert int(rounds0) == int(rounds_ref)
+    # explicit engine= pins exact dense representatives too
+    for engine in ("frontier", "dense"):
+        labe, roundse = connected_components(
+            edges[:, 0], edges[:, 1], n, engine=engine
+        )
+        np.testing.assert_array_equal(np.asarray(labe), np.asarray(ref))
+        assert int(roundse) == int(rounds_ref)
+    # sparse graphs stay below the threshold: bit-exact on auto
+    sparse = list_graph(n, 3, seed=13)
+    ref_s, rounds_s = shiloach_vishkin(sparse[:, 0], sparse[:, 1], n)
+    lab_s, rounds_sa = connected_components(sparse[:, 0], sparse[:, 1], n)
+    np.testing.assert_array_equal(np.asarray(lab_s), np.asarray(ref_s))
+    assert int(rounds_sa) == int(rounds_s)

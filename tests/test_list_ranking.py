@@ -93,3 +93,33 @@ def test_kiss_generated_list_is_valid():
     succ = random_linked_list(1000, seed=7)
     ref = serial_list_rank(succ)  # raises if the chain doesn't cover n
     assert ref.min() == 0 and ref.max() == 999
+
+
+def test_unknown_kernel_impl_and_pack_mode_raise():
+    """Unknown kernel_impl= used to fall through to the XLA path
+    silently; now every dispatch string is validated, naming choices."""
+    from repro.core import list_rank
+
+    succ = random_succ(64, 3)
+    with pytest.raises(ValueError, match="kernel_impl.*'pallas'"):
+        random_splitter_rank(succ, 8, kernel_impl="palas")
+    with pytest.raises(ValueError, match="kernel_impl.*'xla'"):
+        list_rank(succ, 8, kernel_impl="bogus")
+    with pytest.raises(ValueError, match="pack_mode.*'aos'"):
+        random_splitter_rank(succ, 8, pack_mode="aso")
+    with pytest.raises(ValueError, match="pack_mode"):
+        wylie_rank(succ, pack_mode="bogus")
+    from repro.distributed.graph import sharded_random_splitter_rank
+
+    with pytest.raises(ValueError, match="kernel_impl"):
+        sharded_random_splitter_rank(succ, 8, kernel_impl="bogus")
+
+
+def test_kernel_impl_routes_are_bit_exact():
+    succ = random_succ(300, 5)
+    ref = np.asarray(random_splitter_rank(succ, 16, seed=1))
+    for impl in ("auto", "pallas_interpret"):
+        got = np.asarray(
+            random_splitter_rank(succ, 16, seed=1, kernel_impl=impl)
+        )
+        np.testing.assert_array_equal(got, ref, err_msg=impl)

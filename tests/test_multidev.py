@@ -61,3 +61,8 @@ def test_sharded_cc_sparse_exchange_bit_exact():
 @pytest.mark.slow
 def test_sharded_rank_pallas_kernels():
     _run("sharded_rank_pallas")
+
+
+@pytest.mark.slow
+def test_sharded_trees_forest_and_tour():
+    _run("sharded_trees")

@@ -1,0 +1,268 @@
+"""repro.trees: spanning-forest extraction from CC hook decisions,
+Euler tour construction, and batched tree computations, checked
+bit-exactly against a serial NumPy oracle on adversarial tree shapes
+and on both list-ranking engines."""
+import numpy as np
+import pytest
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
+
+from repro.core import connected_components, num_components
+from repro.core.components import shiloach_vishkin
+from repro.core.frontier import frontier_shiloach_vishkin
+from repro.core.serial import serial_connected_components
+from repro.data.graphs import molecule_batch, random_tree, random_tree_forest
+from repro.ops.kiss import giant_dust_graph, list_graph, random_graph, tree_graph
+from repro.trees import (
+    euler_tour,
+    spanning_forest,
+    tour_capacity,
+    tree_analytics,
+    tree_computations,
+)
+from repro.trees.reference import serial_tree_reference
+
+FIELDS = ("parent", "depth", "subtree_size", "preorder", "postorder")
+
+
+def _path(n):
+    return np.stack(
+        [np.arange(n - 1, dtype=np.int32),
+         np.arange(1, n, dtype=np.int32)], axis=1
+    )
+
+
+def _star(n):
+    return np.stack(
+        [np.zeros(n - 1, np.int32), np.arange(1, n, dtype=np.int32)], axis=1
+    )
+
+
+def _caterpillar(spine):
+    """Spine path + one leg per spine node."""
+    su = np.arange(spine - 1, dtype=np.int32)
+    legs = np.arange(spine, dtype=np.int32)
+    return np.concatenate(
+        [np.stack([su, su + 1], axis=1),
+         np.stack([legs, legs + spine], axis=1)]
+    ).astype(np.int32)
+
+
+def _assert_matches_reference(u, v, n, *, root=None, pad_to=None,
+                              engines=("wylie", "splitter")):
+    ref = serial_tree_reference(u, v, n, root=root)
+    tour = euler_tour(u, v, n, root=root, pad_to=pad_to)
+    for eng in engines:
+        comp = tree_computations(tour, rank_engine=eng)
+        for k in FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(comp, k)), ref[k],
+                err_msg=f"{k} ({eng})",
+            )
+
+
+def _forest_cases():
+    r = np.random.default_rng(11)
+    return {
+        "tree": (400, tree_graph(400, 3, seed=1)),
+        "giant+dust": (500, giant_dust_graph(500, 0.9, seed=2)),
+        "random": (300, random_graph(300, 0.02, seed=3)),
+        "lists": (400, list_graph(400, 7, seed=4)),
+        "multigraph": (60, r.integers(0, 60, (500, 2)).astype(np.int32)),
+        "empty": (9, np.zeros((0, 2), np.int32)),
+    }
+
+
+@pytest.mark.parametrize("family", sorted(_forest_cases()), ids=lambda f: f)
+def test_spanning_forest_valid_and_engine_independent(family):
+    n, edges = _forest_cases()[family]
+    forest = spanning_forest(edges[:, 0], edges[:, 1], n, engine="dense")
+    # exactly n - #components edges, every one a real input edge
+    assert forest.num_edges == n - num_components(forest.labels)
+    real = {
+        (min(int(a), int(b)), max(int(a), int(b)))
+        for a, b in edges if a != b
+    }
+    for a, b in zip(forest.edge_u, forest.edge_v):
+        assert (min(int(a), int(b)), max(int(a), int(b))) in real
+    # the forest spans the same partition as the input graph
+    np.testing.assert_array_equal(
+        serial_connected_components(
+            np.stack([forest.edge_u, forest.edge_v], axis=1), n
+        ),
+        serial_connected_components(edges, n),
+    )
+    # frontier engine records the identical forest (deterministic ties)
+    ff = spanning_forest(
+        edges[:, 0], edges[:, 1], n, engine="frontier", min_bucket=64
+    )
+    np.testing.assert_array_equal(ff.edge_u, forest.edge_u)
+    np.testing.assert_array_equal(ff.edge_v, forest.edge_v)
+
+
+@pytest.mark.parametrize("engine", ["dense", "frontier"])
+def test_record_hooks_bit_neutral(engine):
+    """record_hooks=True leaves labels AND round counts bit-identical."""
+    fn = {
+        "dense": shiloach_vishkin,
+        "frontier": frontier_shiloach_vishkin,
+    }[engine]
+    for n, edges in _forest_cases().values():
+        ref_lab, ref_rounds = fn(edges[:, 0], edges[:, 1], n)
+        lab, rounds, _hooks = fn(
+            edges[:, 0], edges[:, 1], n, record_hooks=True
+        )
+        np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref_lab))
+        assert int(rounds) == int(ref_rounds)
+
+
+def test_record_hooks_bit_neutral_sharded():
+    from repro.distributed.graph import graph_mesh, sharded_shiloach_vishkin
+
+    mesh = graph_mesh(1)
+    n, edges = _forest_cases()["giant+dust"]
+    ref_lab, ref_rounds = sharded_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, mesh=mesh
+    )
+    lab, rounds, (hu, hv) = sharded_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, mesh=mesh, record_hooks=True
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref_lab))
+    assert int(rounds) == int(ref_rounds)
+    # and the sharded record matches the dense engine's
+    _, _, (hu_ref, hv_ref) = shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, record_hooks=True
+    )
+    np.testing.assert_array_equal(np.asarray(hu), np.asarray(hu_ref))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(hv_ref))
+
+
+def test_afforest_prepass_forest_still_spans():
+    n = 600
+    edges = giant_dust_graph(n, 0.9, seed=6)
+    forest = spanning_forest(
+        edges[:, 0], edges[:, 1], n, engine="frontier",
+        sample_rounds=3, min_bucket=64,
+    )
+    assert forest.num_edges == n - num_components(forest.labels)
+    np.testing.assert_array_equal(
+        serial_connected_components(
+            np.stack([forest.edge_u, forest.edge_v], axis=1), n
+        ),
+        serial_connected_components(edges, n),
+    )
+
+
+@pytest.mark.parametrize(
+    "shape", ["path", "star", "caterpillar", "random-tree", "kary-tree"]
+)
+def test_tree_computations_match_serial_reference(shape):
+    if shape == "path":
+        n, edges = 80, _path(80)
+    elif shape == "star":
+        n, edges = 64, _star(64)
+    elif shape == "caterpillar":
+        n, edges = 60, _caterpillar(30)
+    elif shape == "random-tree":
+        n, edges = 257, random_tree(257, seed=5)
+    else:
+        e = tree_graph(200, 4, seed=6)
+        f = spanning_forest(e[:, 0], e[:, 1], 200)
+        n, edges = 200, np.stack([f.edge_u, f.edge_v], axis=1)
+    _assert_matches_reference(edges[:, 0], edges[:, 1], n)
+
+
+def test_multi_tree_forest_and_padding():
+    n = 300
+    edges = random_tree_forest(n, 12, seed=7)
+    u, v = edges[:, 0], edges[:, 1]
+    _assert_matches_reference(u, v, n)
+    # padded capacity must not change any result
+    cap = tour_capacity(len(u))
+    assert cap >= 2 * len(u)
+    _assert_matches_reference(u, v, n, pad_to=cap)
+    with pytest.raises(ValueError, match="pad_to"):
+        euler_tour(u, v, n, pad_to=2 * len(u) - 2)
+
+
+def test_rerooted_single_tree():
+    edges = random_tree(90, seed=8)
+    _assert_matches_reference(edges[:, 0], edges[:, 1], 90, root=41)
+    ref = serial_tree_reference(edges[:, 0], edges[:, 1], 90, root=41)
+    assert ref["depth"][41] == 0 and ref["parent"][41] == 41
+
+
+def test_degenerate_tours():
+    # no edges at all: every node a size-1 root
+    _assert_matches_reference(
+        np.zeros(0, np.int32), np.zeros(0, np.int32), 5
+    )
+    comp = tree_computations(
+        euler_tour(np.zeros(0, np.int32), np.zeros(0, np.int32), 5)
+    )
+    np.testing.assert_array_equal(np.asarray(comp.parent), np.arange(5))
+    np.testing.assert_array_equal(np.asarray(comp.subtree_size), np.ones(5))
+    # single edge
+    _assert_matches_reference(
+        np.array([1], np.int32), np.array([0], np.int32), 2
+    )
+
+
+def test_tree_analytics_end_to_end_molecule_batch():
+    g = molecule_batch(8, nodes_per_graph=12, edges_per_graph=20, seed=9)
+    n = 8 * 12
+    ta = tree_analytics(g["src"], g["dst"], n, pad_to=tour_capacity(n))
+    # spanning forest respects molecule boundaries: a component never
+    # crosses graph_ids (molecule_batch unions disjoint graphs)
+    labels = np.asarray(ta.forest.labels)
+    for comp_label in np.unique(labels):
+        gids = np.unique(g["graph_ids"][labels == comp_label])
+        assert len(gids) == 1
+    ref = serial_tree_reference(ta.forest.edge_u, ta.forest.edge_v, n)
+    for k in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ta.computations, k)), ref[k], err_msg=k
+        )
+    # depth/size sanity: parent depths are one less, sizes telescope
+    depth = np.asarray(ta.depth)
+    parent = np.asarray(ta.parent)
+    nonroot = parent != np.arange(n)
+    np.testing.assert_array_equal(
+        depth[nonroot], depth[parent[nonroot]] + 1
+    )
+
+
+def test_connected_components_record_hooks_via_dispatch():
+    edges = list_graph(200, 3, seed=10)
+    res = connected_components(
+        edges[:, 0], edges[:, 1], 200, record_hooks=True
+    )
+    labels, rounds, (hu, hv) = res
+    ref_lab, ref_rounds = connected_components(edges[:, 0], edges[:, 1], 200)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_lab))
+    assert int(rounds) == int(ref_rounds)
+    assert int((np.asarray(hu) < 200).sum()) == 200 - num_components(labels)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 60), st.integers(1, 8), st.integers(0, 10_000))
+def test_random_forests_match_reference(n, trees, seed):
+    edges = random_tree_forest(n, trees, seed=seed)
+    u = edges[:, 0] if len(edges) else np.zeros(0, np.int32)
+    v = edges[:, 1] if len(edges) else np.zeros(0, np.int32)
+    _assert_matches_reference(u, v, n, engines=("wylie",))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 150), st.integers(0, 10_000))
+def test_random_graph_forests_are_spanning(n, m, seed):
+    r = np.random.default_rng(seed)
+    edges = r.integers(0, n, size=(m, 2)).astype(np.int32)
+    forest = spanning_forest(edges[:, 0], edges[:, 1], n, engine="dense")
+    assert forest.num_edges == n - num_components(forest.labels)
+    np.testing.assert_array_equal(
+        serial_connected_components(
+            np.stack([forest.edge_u, forest.edge_v], axis=1), n
+        ),
+        serial_connected_components(edges, n),
+    )

@@ -32,6 +32,7 @@ def run(n: int | None = None) -> list[str]:
         cc_exchange_words_per_round,
         graph_mesh,
         rank_exchange_words,
+        sharded_frontier_shiloach_vishkin,
         sharded_random_splitter_rank,
         sharded_shiloach_vishkin,
     )
@@ -87,6 +88,31 @@ def run(n: int | None = None) -> list[str]:
                 t * 1e6,
                 f"capacity={st.capacity};wordsR1={int(w[0])};"
                 f"wordsLast={int(w[-1])};denseWords={3 * n}",
+            )
+        )
+        # min_bucket=64 keeps the bucket ladder active at smoke scale
+        # too, so the guarded per-device visit counters exercise real
+        # compaction in CI, not just the single-level fast path.
+        t = time_fn(
+            lambda m=mesh: sharded_frontier_shiloach_vishkin(
+                edges[:, 0], edges[:, 1], n, mesh=m, min_bucket=64
+            )[0]
+        )
+        _, _, stf = sharded_frontier_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh, min_bucket=64,
+            with_stats=True,
+        )
+        # per-DEVICE edge-slot visits vs the dense sharded walk's
+        # 2 * ceil(m2/nd) * rounds -- the tentpole's work-compaction win
+        dense_per_dev = 2 * (-(-stf.m2 // d)) * stf.rounds
+        lines.append(
+            emit(
+                f"cc_sharded_frontier_dev{d}",
+                t * 1e6,
+                f"rounds={stf.rounds};edgesTouched/dev={stf.edges_touched};"
+                f"denseTouched/dev={dense_per_dev};"
+                f"levels={len(stf.levels)};"
+                f"wordsLast={int(stf.words_per_round[-1])}",
             )
         )
         t = time_fn(

@@ -28,12 +28,15 @@ from repro.core.pram import (
 # Engine-specific tuning knobs: naming one pins the dispatch to that
 # engine (regardless of device count), so the same call behaves
 # identically on any machine -- the list_rank pack_mode convention.
-# hook_impl is shared by the two single-device engines (dense sv_run and
-# frontier), so it pins "single-device" rather than "frontier".
-_FRONTIER_KW = frozenset({"sample_rounds", "min_bucket", "seed"})
+# The sampling pre-pass (sample_rounds/seed) exists only on the
+# single-device frontier engine; min_bucket and hook_impl are honoured
+# by BOTH frontier engines (single-device and sharded), so with a mesh
+# they steer toward engine="sharded_frontier" instead of raising.
+_SAMPLING_KW = frozenset({"sample_rounds", "seed"})
+_FRONTIER_KW = _SAMPLING_KW | {"min_bucket"}
 _SINGLE_KW = _FRONTIER_KW | {"hook_impl"}
 _SHARDED_KW = frozenset({"exchange", "sparse_capacity", "axis"})
-_CC_ENGINES = ("auto", "frontier", "dense")
+_CC_ENGINES = ("auto", "frontier", "dense", "sharded_frontier")
 
 # Sampling policy (ROADMAP decision, PR 3): when the auto dispatch
 # lands on the frontier engine and the graph is edge-heavy -- at least
@@ -68,32 +71,63 @@ def connected_components(
 ):
     """Connected components with automatic engine dispatch.
 
-    Routes to the edge-partitioned multi-device engine
-    (``repro.distributed.graph``) when a mesh is given or more than one
-    device is visible; otherwise runs the **frontier-compacted** engine
-    (``repro.core.frontier``), the single-device fast path. All paths
-    return identical (labels, rounds). ``engine="dense"`` is the escape
-    hatch back to the all-edges-every-round walk (single device:
-    ``sv_run``; with a mesh or several devices: the sharded engine,
-    which IS the dense walk). ``engine="frontier"`` forces the frontier
-    engine even when several devices are visible, but rejects an
-    explicit ``mesh=`` (no sharded frontier yet).
+    Returns ``(labels, rounds)`` -- identical on every path --
+    ``labels[i]`` being the component root id. The full engine matrix
+    (valid values, defaults, auto rules, exactness guarantees) lives in
+    ``docs/engines.md``; summary:
 
-    Extra kwargs go to the chosen engine and steer the auto dispatch:
-    frontier knobs (e.g. ``sample_rounds=2`` for the Afforest pre-pass)
-    pick the frontier engine on any machine, sharded knobs (e.g.
-    ``exchange="sparse"``) the sharded engine; mixing the two raises.
-    The frontier engine's shrink loop is host-driven, so inside a
-    ``jax.jit`` trace the auto path falls back to the (fully traceable)
-    dense ``sv_run`` loop.
+    ``engine=`` -- one of ``"auto"`` (default), ``"frontier"``,
+    ``"dense"``, ``"sharded_frontier"``:
+
+    * ``"auto"``: an explicit ``mesh=`` picks the **sharded frontier**
+      engine (each device compacts its own edge shard between rounds);
+      otherwise one visible device runs the single-device
+      frontier-compacted engine (``repro.core.frontier``) and several
+      visible devices the edge-partitioned sharded engine
+      (``repro.distributed.graph``). The two frontier engines' level
+      loops are host-driven, so inside a ``jax.jit`` trace auto falls
+      back to the fully-traceable dense walks.
+    * ``"frontier"``: pin the single-device frontier engine (rejects
+      ``mesh=``).
+    * ``"dense"``: the all-edges-every-round escape hatch (single
+      device: ``sv_run``; with a mesh or several devices: the sharded
+      engine, which IS the dense walk).
+    * ``"sharded_frontier"``: pin the per-shard frontier engine
+      (``mesh=`` optional -- defaults to all visible devices).
+
+    Engine kwargs (each steers the auto dispatch toward an engine that
+    honours it; every string is validated against the sets in
+    ``docs/engines.md``):
+
+    * ``sample_rounds=`` (int, default 0) / ``seed=`` (int, default 0)
+      -- the Afforest-style sampling pre-pass; single-device frontier
+      engine only.
+    * ``min_bucket=`` (int, default 1024) -- smallest frontier bucket;
+      both frontier engines (per-device in the sharded one).
+    * ``hook_impl=`` -- ``"xla"`` (default), ``"auto"``, ``"pallas"``,
+      ``"pallas_interpret"``: the SV2/SV3 hook-phase implementation
+      (``kernels/edge_hook``); dense, frontier, and sharded-frontier
+      engines (shard-local in the latter).
+    * ``exchange=`` -- ``"dense"`` or ``"sparse"``: the cross-device
+      label exchange; sharded engines only. Defaults: ``"dense"`` on
+      the dense sharded engine, ``"sparse"`` on the sharded frontier
+      engine. ``sparse_capacity=`` (int, default: frontier-sized with
+      an ``n/8`` cap) bounds the per-device (index, label) buffer.
+    * ``axis=`` (str, default ``"graph"``) -- mesh axis name carrying
+      the edge partition; sharded engines only.
+    * ``dedup=`` (bool, default True), ``record_hooks=`` (bool, default
+      False), ``with_stats=`` (bool, default False) -- every engine;
+      ``record_hooks`` appends the spanning-forest hook record (see
+      ``repro.trees``) without changing labels or rounds.
 
     On the auto path, edge-heavy graphs (>= ``AUTO_SAMPLE_DENSITY``
-    input edges per node) enable the Afforest sampling pre-pass
-    automatically (``AUTO_SAMPLE_ROUNDS`` rounds): labels stay a correct
-    partition but representatives may differ from the dense engine's;
-    pass ``sample_rounds=`` explicitly (0 disables) or pin ``engine=``
-    to opt out. ``record_hooks=True`` works on every engine and appends
-    the spanning-forest hook record (see ``repro.trees``).
+    input edges per node) reaching the single-device frontier engine
+    enable the sampling pre-pass automatically (``AUTO_SAMPLE_ROUNDS``
+    rounds): labels stay a correct partition but representatives may
+    differ from the dense engine's; pass ``sample_rounds=`` explicitly
+    (0 disables) or pin ``engine=`` to opt out. Every other
+    engine/kwarg combination is bit-exact in labels, round counts, and
+    recorded hook forests against every other.
     """
     import jax
 
@@ -102,20 +136,42 @@ def connected_components(
     check_choice("engine", engine, _CC_ENGINES)
     single_kw = _SINGLE_KW & kwargs.keys()
     sharded_kw = _SHARDED_KW & kwargs.keys()
-    if single_kw and (sharded_kw or mesh is not None):
-        raise ValueError(
-            f"{sorted(single_kw)} are single-device options; drop them or "
-            f"drop {sorted(sharded_kw) or 'mesh='}"
-        )
+    sampling_kw = _SAMPLING_KW & kwargs.keys()
     tracing = is_tracer(src) or is_tracer(dst)
+    if sampling_kw and (
+        sharded_kw or mesh is not None or engine == "sharded_frontier"
+    ):
+        trigger = (
+            sorted(sharded_kw) if sharded_kw
+            else "mesh=" if mesh is not None
+            else "engine='sharded_frontier'"
+        )
+        raise ValueError(
+            f"{sorted(sampling_kw)} are single-device frontier options "
+            "(the sampling pre-pass has no sharded counterpart); drop "
+            f"them or drop {trigger}"
+        )
     if engine == "auto":
-        if _FRONTIER_KW & kwargs.keys():
+        if mesh is not None:
+            # The sharded-frontier auto rule: an explicit mesh gets the
+            # composed per-shard frontier engine. Its level loop is
+            # host-driven, so a jit trace falls back to the traceable
+            # dense sharded walk (which rejects the frontier knobs).
+            engine = "_sharded" if tracing else "sharded_frontier"
+        elif _FRONTIER_KW & kwargs.keys() and not sharded_kw:
             engine = "frontier"
-        elif single_kw:
+        elif single_kw and not sharded_kw:
             # hook_impl alone: dense sv_run honours it too and is fully
             # traceable, so a jit trace falls back there
             engine = "dense" if tracing else "frontier"
-        elif mesh is not None or sharded_kw or jax.device_count() > 1:
+        elif sharded_kw:
+            # bucket/hook knobs + exchange knobs only meet in the
+            # composed engine (default mesh over all visible devices)
+            engine = (
+                "sharded_frontier" if (single_kw and not tracing)
+                else "_sharded"
+            )
+        elif jax.device_count() > 1:
             engine = "_sharded"
         else:
             engine = "dense" if tracing else "frontier"
@@ -127,12 +183,12 @@ def connected_components(
         if sharded_kw:
             raise ValueError(
                 f"{sorted(sharded_kw)} are sharded-engine options; drop "
-                "them or use engine='auto'"
+                "them or use engine='auto'/'sharded_frontier'"
             )
         if mesh is not None:
             raise ValueError(
                 "the frontier engine is single-device; drop mesh= or use "
-                "engine='auto'/'dense'"
+                "engine='auto'/'sharded_frontier'"
             )
         if tracing:
             raise ValueError(
@@ -143,12 +199,32 @@ def connected_components(
         return frontier_shiloach_vishkin(
             src, dst, num_nodes, max_rounds=max_rounds, **kwargs
         )
+    if engine == "sharded_frontier":
+        if tracing:
+            raise ValueError(
+                "the sharded frontier engine's level loop is host-driven "
+                "and cannot run inside jit; call it outside jit or use "
+                "engine='dense'"
+            )
+        from repro.distributed.graph import sharded_frontier_shiloach_vishkin
+
+        return sharded_frontier_shiloach_vishkin(
+            src, dst, num_nodes, mesh=mesh, max_rounds=max_rounds, **kwargs
+        )
     if engine == "dense":
         fkw = _FRONTIER_KW & kwargs.keys()
         if fkw:
             raise ValueError(
                 f"{sorted(fkw)} are frontier-engine options; use "
-                "engine='frontier'"
+                "engine='frontier' or engine='sharded_frontier'"
+            )
+        if single_kw and (mesh is not None or sharded_kw):
+            # only hook_impl can land here: the dense sharded engine has
+            # no kernel hook path
+            raise ValueError(
+                f"{sorted(single_kw)} with a mesh needs "
+                "engine='sharded_frontier' (the dense sharded engine "
+                "walks every edge through plain XLA scatters)"
             )
         if single_kw or (mesh is None and not sharded_kw
                          and jax.device_count() == 1):
@@ -156,6 +232,12 @@ def connected_components(
             return shiloach_vishkin(
                 src, dst, num_nodes, max_rounds=max_rounds, **kwargs
             )
+    elif single_kw:  # engine == "_sharded" off the auto path
+        raise ValueError(
+            f"{sorted(single_kw)} cannot run inside jit with a mesh: the "
+            "frontier level loop is host-driven; call outside jit or "
+            "drop them"
+        )
     # multi-device (or sharded knobs): the sharded engine IS the dense walk
     from repro.distributed.graph import sharded_shiloach_vishkin
 
@@ -168,15 +250,27 @@ _SINGLE_ENGINE_KW = frozenset({"pack_mode"})
 
 
 def list_rank(succ, num_splitters=None, *, mesh=None, **kwargs):
-    """List ranking with automatic engine dispatch (see
-    ``connected_components``).
+    """List ranking with automatic engine dispatch: the random-splitter
+    engine on one device, its edge-partitioned sharded counterpart when
+    a ``mesh=`` is given or several devices are visible. Returns the
+    exact integer ranks (bit-identical on every path). The full matrix
+    lives in ``docs/engines.md``; keywords:
 
-    ``pack_mode`` is a single-device tuning knob: when given (without an
-    explicit mesh) the single-device engine runs regardless of device
-    count, so the same call behaves identically on any machine;
-    combining it WITH a mesh raises. ``kernel_impl`` is honoured by BOTH
-    engines (the sharded engine routes its RS4/RS5 phases through the
-    same Pallas kernels); unknown strings raise naming the choices.
+    * ``num_splitters=`` (int, default: ``min(4096,
+      max_splitters_for_linear_work(n))``) -- RS1 splitter count.
+    * ``kernel_impl=`` -- ``"auto"`` (default), ``"xla"``, ``"pallas"``,
+      ``"pallas_interpret"``: routes the RS4/RS5 phases through the
+      Pallas kernels; honoured by BOTH engines ("auto" compiles them on
+      real TPUs and keeps plain XLA elsewhere).
+    * ``pack_mode=`` -- ``"aos"`` (default), ``"soa"``, ``"word64"``:
+      single-device walk-state packing (Table 2); when given without a
+      mesh it pins the single-device engine on any machine, combining
+      it WITH a mesh raises.
+    * ``splitters=``/``seed=``/``head=``/``max_steps=``/``with_stats=``
+      -- forwarded to the chosen engine unchanged (same KISS streams on
+      both, so default splitter selection agrees bit-exactly).
+
+    Unknown dispatch strings raise naming the valid choices.
     """
     import jax
 

@@ -78,7 +78,10 @@ class FrontierStats:
     largest_component_frac: float = 0.0  # node share of the Afforest giant
 
 
-def _next_pow2(x: int) -> int:
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 0): the bucket ladder every
+    frontier engine -- single-device and sharded -- sizes its compacted
+    edge buffers on, so compiled shapes stay static per level."""
     return 1 << max(x - 1, 0).bit_length() if x > 0 else 1
 
 
@@ -126,9 +129,16 @@ def _run_level(a, b, D, Q, s, aux, *, n, bound, shrink_at, hook_impl,
 
 
 @partial(jax.jit, static_argnames=("size",))
-def _compact(a, b, fmask, *, size):
+def compact_frontier(a, b, fmask, *, size):
     """Gather the masked frontier into a ``size``-slot buffer, padding
-    with inert (0, 0) self-loops. ``size`` must cover the mask count."""
+    with inert (0, 0) self-loops. ``size`` must cover the mask count.
+
+    This is the **shard-local compaction primitive**: it only ever looks
+    at the edge buffer it is handed, so the sharded frontier engine
+    (``repro.distributed.graph.sharded_frontier_shiloach_vishkin``) runs
+    it unchanged inside ``shard_map`` -- each device compacts its own
+    edge shard into a bucket sized by the global (pmax'd) live count, so
+    every shard keeps one common compiled shape per level."""
     m = a.shape[0]
     idx = jnp.nonzero(fmask, size=size, fill_value=m)[0]
     valid = idx < m
@@ -234,8 +244,8 @@ def frontier_shiloach_vishkin(
         stats.live_after_sample = live
         stats.edges_touched += m2  # full-list live scan (pre-pass rounds
         # walked only the sampled edges, so this mask needs its own pass)
-        size = min(m2, max(min_bucket, _next_pow2(live)))
-        a, b = _compact(a, b, live_mask, size=size)
+        size = min(m2, max(min_bucket, next_pow2(live)))
+        a, b = compact_frontier(a, b, live_mask, size=size)
         m2_level = size
     else:
         m2_level = m2
@@ -260,7 +270,7 @@ def frontier_shiloach_vishkin(
             break
         # Shrink: the masked frontier fits the next power-of-two bucket.
         live = int(jnp.sum(fmask.astype(jnp.int32)))
-        new_size = max(min_bucket, _next_pow2(live))
+        new_size = max(min_bucket, next_pow2(live))
         if new_size >= m2_level:  # can't shrink further: run to convergence
             force_converge = True
             continue
@@ -268,7 +278,7 @@ def frontier_shiloach_vishkin(
         # gather-write of the surviving edges into the new buffer is
         # extra work.
         stats.edges_touched += new_size
-        a, b = _compact(a, b, fmask, size=new_size)
+        a, b = compact_frontier(a, b, fmask, size=new_size)
         m2_level = new_size
 
     D = sv_compress(D, n)

@@ -51,7 +51,7 @@ and both report their per-round exchange volume so
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import jax
@@ -61,11 +61,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core.components import (
+    HOOK_IMPLS,
     _maybe_dedup,
     check_choice,
+    init_hooks,
+    sv_compress,
     sv_round_bound,
+    sv_round_fns,
     sv_run,
 )
+from repro.core.frontier import compact_frontier, next_pow2
 from repro.core.list_ranking import (
     KERNEL_IMPLS,
     SplitterStats,
@@ -79,6 +84,12 @@ from repro.core.pram import lockstep_walk
 Array = jax.Array
 
 GRAPH_AXIS = "graph"
+
+# Valid cross-device label-exchange modes for the sharded CC engines.
+# The frontier-compacted sharded engine defaults to "sparse" (volumes
+# are measured per round; late-round frontiers are tiny), the dense
+# sharded engine to "dense" (it re-walks every edge anyway).
+EXCHANGES = ("dense", "sparse")
 
 
 def graph_mesh(num_devices: int | None = None, axis: str = GRAPH_AXIS) -> Mesh:
@@ -297,7 +308,7 @@ def sharded_shiloach_vishkin(
     arrays are pmin-merged so they match the single-device record
     bit-exactly), plus a ``CCExchangeStats`` when ``with_stats``.
     """
-    check_choice("exchange", exchange, ("dense", "sparse"))
+    check_choice("exchange", exchange, EXCHANGES)
     mesh = mesh if mesh is not None else graph_mesh(axis=axis)
     axis = _resolve_axis(mesh, axis)
     nd = mesh.shape[axis]
@@ -352,6 +363,269 @@ def cc_exchange_words_per_round(
     if stats is not None:
         return stats.words_per_round
     return 3 * num_nodes
+
+
+# ---------------------------------------------------------------------------
+# Sharded frontier-compacted Shiloach-Vishkin (per-shard edge frontiers)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "num_nodes", "bound", "shrink_at", "mesh", "axis", "exchange",
+        "capacity", "hook_impl", "record_hooks",
+    ),
+)
+def _sharded_frontier_level(
+    a, b, D, Q, aux, s, *, num_nodes, bound, shrink_at, mesh, axis,
+    exchange, capacity, hook_impl, record_hooks=False,
+):
+    """One bucket level of the sharded frontier engine: every device runs
+    SV rounds over its own (compacted) edge shard at a fixed per-device
+    buffer size, with the usual per-round label exchanges, until
+    convergence, the round bound, or -- when ``shrink_at`` is set -- the
+    globally largest per-device frontier drops to half the buffer.
+
+    The shrink watermark is ``pmax`` of the per-shard live counts, read
+    off the round body's own SV3 compare mask exactly like the
+    single-device engine, and it rides in the loop carry so the
+    ``while_loop`` predicate stays collective-free (every replica holds
+    the identical pmax'd scalar -- the same uniformity argument as the
+    sparse exchange's overflow cond). Node-indexed state (labels, stamps,
+    hook records, exchange stats) is replicated and threads through
+    levels untouched by compaction."""
+    n = num_nodes
+
+    def block(a_loc, b_loc, D, Q, aux, s):
+        if exchange == "sparse":
+            ml, mq = _sparse_merge_fns(axis, n, capacity)
+        else:
+            ml, mq = _dense_merge_fns(axis, n)
+        mh = (lambda arr: jax.lax.pmin(arr, axis)) if record_hooks else None
+        body = sv_round_fns(
+            a_loc, b_loc, n, ml, mq, hook_impl=hook_impl,
+            with_frontier=True, record_hooks=record_hooks, merge_hooks=mh,
+        )
+        m_loc = a_loc.shape[0]
+
+        def wrapped(carry):
+            D, Q, aux, s, changed, fmask, _live_max, rounds = carry
+            D, Q, aux, s, changed, fmask = body(
+                (D, Q, aux, s, changed, fmask)
+            )
+            live = jnp.sum(fmask.astype(jnp.int32))
+            live_max = jax.lax.pmax(live, axis)
+            return D, Q, aux, s, changed, fmask, live_max, rounds + 1
+
+        def cond(carry):
+            _D, _Q, _aux, s, changed, _fmask, live_max, _rounds = carry
+            keep = jnp.logical_and(changed, s <= bound)
+            if shrink_at is not None:
+                keep = jnp.logical_and(keep, live_max > shrink_at)
+            return keep
+
+        init = (
+            D, Q, aux, s, jnp.bool_(True), jnp.ones((m_loc,), jnp.bool_),
+            jnp.int32(m_loc), jnp.int32(0),
+        )
+        D, Q, aux, s, changed, fmask, live_max, rounds = jax.lax.while_loop(
+            cond, wrapped, init
+        )
+        return D, Q, aux, s, changed, fmask, live_max, rounds
+
+    rep = jax.tree_util.tree_map(lambda _: P(), aux)
+    return compat.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(), P(), rep, P()),
+        out_specs=(P(), P(), rep, P(), P(), P(axis), P(), P()),
+        check_vma=False,
+    )(a, b, D, Q, aux, s)
+
+
+@partial(jax.jit, static_argnames=("size", "mesh", "axis"))
+def _sharded_compact(a, b, fmask, *, size, mesh, axis):
+    """Every device compacts its own edge shard into a ``size``-slot
+    bucket (the global pmax'd live count's power-of-two ceiling) via the
+    shard-local ``core.frontier.compact_frontier`` primitive -- zero
+    cross-device traffic; shards stay where they are, only shrink."""
+    return compat.shard_map(
+        partial(compact_frontier, size=size),
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False,
+    )(a, b, fmask)
+
+
+@dataclass
+class ShardedFrontierStats:
+    """Work + exchange accounting for the sharded frontier engine.
+
+    ``edges_touched`` counts **per-device** edge-slot visits with the
+    same rules as ``core.frontier.FrontierStats`` (two hook passes per
+    round over the local bucket, one bucket write per compaction); the
+    dense sharded engine's same-metric cost is ``2 * ceil(m2 / nd) *
+    rounds`` per device. ``words_per_round`` / ``frontier_per_round``
+    are the measured exchange volumes, as in ``CCExchangeStats``;
+    ``capacities`` lists the frontier-driven sparse buffer size chosen
+    at each level (empty for the dense exchange)."""
+
+    rounds: int
+    edges_touched: int  # per-device edge-slot visits (see docstring)
+    m2: int  # global oriented edge count after dedup
+    num_devices: int
+    levels: list = field(default_factory=list)  # (per-device bucket, rounds)
+    exchange: str = "sparse"
+    capacities: list = field(default_factory=list)  # per-level sparse cap
+    words_per_round: np.ndarray | None = None
+    frontier_per_round: np.ndarray | None = None
+
+
+def frontier_sparse_capacity(
+    num_nodes: int, bucket: int, user_capacity: int | None = None
+) -> int:
+    """Per-device sparse-exchange buffer for one frontier level.
+
+    Sized from the live frontier: a device's min-scatter changes at most
+    one label slot per local edge, so ``bucket`` (the per-device frontier
+    buffer) is a hard bound on its per-round change count -- once the
+    frontier undercuts the fixed ``default_sparse_capacity`` the buffer
+    shrinks with it and overflow becomes impossible. Early levels (bucket
+    above the fixed default) keep the default capacity with the dense
+    fallback live, exactly like the dense sharded engine's sparse mode.
+    An explicit ``user_capacity`` is honoured verbatim at every level
+    (that keeps the overflow path forceable in tests)."""
+    if user_capacity is not None:
+        return user_capacity
+    return max(64, min(bucket, default_sparse_capacity(num_nodes)))
+
+
+def sharded_frontier_shiloach_vishkin(
+    src: Array | np.ndarray,
+    dst: Array | np.ndarray,
+    num_nodes: int,
+    *,
+    mesh: Mesh | None = None,
+    axis: str = GRAPH_AXIS,
+    max_rounds: int | None = None,
+    exchange: str = "sparse",
+    sparse_capacity: int | None = None,
+    min_bucket: int = 1024,
+    hook_impl: str = "xla",
+    dedup: bool = True,
+    record_hooks: bool = False,
+    with_stats: bool = False,
+):
+    """Frontier-compacted CC on the mesh: the composition of the sharded
+    engine (edges partitioned, labels replicated, per-round exchanges)
+    with the frontier engine (each device compacts its OWN edge shard to
+    the active frontier between bucket levels).
+
+    Bit-exact in labels, round counts, AND recorded hook forests against
+    both ``sharded_shiloach_vishkin`` and the single-device engines: the
+    round body is the shared ``sv_round_fns``, compaction keeps every
+    unequal-label edge (label equality is permanent, so no future hook
+    winner is ever dropped), and the inert (0, 0) self-loop padding in
+    part-full buckets is invisible to both hook conditions.
+
+    ``exchange="sparse"`` is the DEFAULT here (unlike the dense sharded
+    engine): per-round volumes are measured, and the sparse buffer is
+    sized from the live frontier per level (``frontier_sparse_capacity``)
+    -- once the frontier fits the per-device bucket, overflow to the
+    dense path is impossible by construction. ``hook_impl`` routes each
+    shard's SV2/SV3 hook phases through the fused ``kernels/edge_hook``
+    Pallas kernel (shard-local labels+stamps stay VMEM-resident; the
+    merges see identical arrays either way). Returns ``(labels, rounds)``
+    plus the ``(hook_u, hook_v)`` record when ``record_hooks``, plus a
+    ``ShardedFrontierStats`` when ``with_stats``.
+
+    Like the single-device frontier engine, the level loop is
+    host-driven (bucket sizes are compiled shapes), so this engine
+    cannot run under an outer ``jax.jit`` trace -- ``engine="auto"``
+    falls back to the fully-traceable dense sharded walk there.
+    """
+    n = num_nodes
+    check_choice("exchange", exchange, EXCHANGES)
+    check_choice("hook_impl", hook_impl, HOOK_IMPLS)
+    mesh = mesh if mesh is not None else graph_mesh(axis=axis)
+    axis = _resolve_axis(mesh, axis)
+    nd = mesh.shape[axis]
+    src, dst = _maybe_dedup(src, dst, dedup)
+    src = jnp.asarray(src, jnp.int32).ravel()
+    dst = jnp.asarray(dst, jnp.int32).ravel()
+    a = jnp.concatenate([src, dst])
+    b = jnp.concatenate([dst, src])
+    m2 = int(a.shape[0])
+    bucket = max(-(-m2 // nd), 1)  # per-device edge-buffer size
+    a, b = _pad_to(a, nd * bucket, 0), _pad_to(b, nd * bucket, 0)
+
+    bound = max_rounds if max_rounds is not None else sv_round_bound(n)
+    D = jnp.arange(n, dtype=jnp.int32)
+    Q = jnp.zeros(n, jnp.int32)
+    s = jnp.int32(1)
+    exa = (jnp.zeros(bound + 2, jnp.int32), jnp.zeros(bound + 2, jnp.int32))
+    aux = (init_hooks(n), exa) if record_hooks else exa
+    stats = ShardedFrontierStats(
+        rounds=0, edges_touched=0, m2=m2, num_devices=nd, exchange=exchange,
+    )
+
+    force_converge = False
+    while True:
+        capacity = (
+            frontier_sparse_capacity(n, bucket, sparse_capacity)
+            if exchange == "sparse" else 0
+        )
+        if exchange == "sparse":
+            stats.capacities.append(capacity)
+        shrink_at = (
+            None if (bucket <= min_bucket or force_converge)
+            else bucket // 2
+        )
+        D, Q, aux, s, changed, fmask, live_max, rounds = (
+            _sharded_frontier_level(
+                a, b, D, Q, aux, s,
+                num_nodes=n, bound=bound, shrink_at=shrink_at, mesh=mesh,
+                axis=axis, exchange=exchange, capacity=capacity,
+                hook_impl=hook_impl, record_hooks=record_hooks,
+            )
+        )
+        # Per-device visit accounting mirrors the single-device engine:
+        # SV2 + SV3 passes over the local bucket (the Pallas hook kernel
+        # pays a third, mask, pass), plus the compaction write below.
+        passes = 2 if hook_impl == "xla" else 3
+        stats.edges_touched += passes * int(rounds) * bucket
+        stats.levels.append((bucket, int(rounds)))
+        if not bool(changed) or int(s) > bound:
+            break
+        # Shrink: every shard drops to the power-of-two bucket covering
+        # the LARGEST per-device live count (one shared compiled shape).
+        new_bucket = max(min_bucket, next_pow2(int(live_max)))
+        if new_bucket >= bucket:  # can't shrink further: run to convergence
+            force_converge = True
+            continue
+        stats.edges_touched += new_bucket
+        a, b = _sharded_compact(
+            a, b, fmask, size=new_bucket, mesh=mesh, axis=axis
+        )
+        bucket = new_bucket
+
+    D = sv_compress(D, n)
+    rounds_total = int(s) - 1
+    stats.rounds = rounds_total
+    out = (D, jnp.int32(rounds_total))
+    if record_hooks:
+        hooks, exa = aux
+        out = out + (hooks,)
+    else:
+        exa = aux
+    if not with_stats:
+        return out
+    words, frontier = exa
+    stats.words_per_round = np.asarray(words)[1 : rounds_total + 1]
+    stats.frontier_per_round = np.asarray(frontier)[1 : rounds_total + 1]
+    return out + (stats,)
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,14 @@
 fit VMEM (same small/large split as ``kernels/pointer_jump``) and falls
 back to the unfused XLA phases elsewhere; ``"pallas_interpret"`` runs
 the kernel body as plain JAX ops for CPU validation.
+
+The kernel is **shard-local by construction**: it reads only the edge
+arrays it is handed and the replicated label/stamp state, so the
+sharded frontier engine (``distributed/graph``, ``hook_impl=``) runs it
+unchanged inside ``shard_map`` -- each device fuses the hook phases
+over its own compacted edge bucket, and the per-round label exchanges
+see identical arrays either way. The VMEM budget is per device, so
+``VMEM_NODE_LIMIT`` needs no mesh scaling.
 """
 from __future__ import annotations
 

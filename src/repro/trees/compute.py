@@ -296,13 +296,31 @@ def tree_analytics(
     seed: int = 0,
     **cc_kwargs,
 ) -> TreeAnalytics:
-    """One-shot pipeline on an arbitrary graph: CC + spanning forest
-    (``engine=`` picks the CC engine), Euler tour, and the batched tree
-    computations (``rank_engine=``/``kernel_impl=``/``mesh=`` pick the
-    ranking engine). ``pad_to`` fixes the tour capacity so many
-    variable-size requests compile once (see ``tour_capacity``); a
-    forest of many small graphs (e.g. ``data/graphs.molecule_batch``)
-    is one batched call.
+    """One-shot pipeline on an arbitrary graph: CC + spanning forest,
+    Euler tour, and the batched tree computations. Keywords (full
+    matrix in ``docs/engines.md``):
+
+    * ``engine=`` -- ``"auto"`` (default), ``"frontier"``, ``"dense"``,
+      ``"sharded_frontier"``: the CC engine extracting the forest (as
+      in ``connected_components``); ``**cc_kwargs`` forward to it.
+    * ``rank_engine=`` -- ``"auto"`` (default), ``"wylie"``,
+      ``"splitter"``: the list-ranking engine over the tour ("auto"
+      picks wylie on one device, the sharded splitter engine when a
+      mesh is given or several devices are visible).
+    * ``kernel_impl=`` -- ``"auto"`` (default), ``"xla"``, ``"pallas"``,
+      ``"pallas_interpret"``: Pallas routing for the splitter engine's
+      RS4/RS5 phases (ignored by wylie, validated regardless).
+    * ``num_splitters=`` (int, default: linear-work bound), ``seed=``
+      (int, default 0) -- splitter selection.
+    * ``pad_to=`` (int, default None) -- fixes the tour capacity so many
+      variable-size requests compile once (see ``tour_capacity``); a
+      forest of many small graphs (e.g. ``data/graphs.molecule_batch``)
+      is one batched call.
+    * ``mesh=`` -- threads to BOTH the CC engine and the ranking engine
+      (the all-sharded path end to end).
+
+    All quantities are exact int32: results are bit-identical across
+    every engine combination.
     """
     forest = spanning_forest(
         src, dst, num_nodes, engine=engine, mesh=mesh, **cc_kwargs

@@ -71,9 +71,13 @@ def spanning_forest(
     """Connected components + spanning forest in one CC run.
 
     Thin wrapper over ``repro.core.connected_components(...,
-    record_hooks=True)``: the engine dispatch (frontier / dense /
-    sharded) and every engine kwarg behave exactly as there, and the
-    labels/round counts are bit-identical to a plain CC call -- hook
+    record_hooks=True)``: ``engine=`` (``"auto"`` default /
+    ``"frontier"`` / ``"dense"`` / ``"sharded_frontier"``), ``mesh=``,
+    ``max_rounds=``, and every engine kwarg (``min_bucket=``,
+    ``hook_impl=``, ``exchange=``, ``sparse_capacity=``, ``axis=``,
+    ``sample_rounds=``, ``seed=``, ``dedup=``) behave exactly as there
+    -- see ``docs/engines.md`` for the full matrix -- and the
+    labels/round counts are bit-identical to a plain CC call: hook
     recording only *reads* the round state. The recorded forest is
     itself engine-independent (ties break to the lexicographically
     smallest edge), except under a sampling pre-pass (``sample_rounds``)

@@ -1,0 +1,55 @@
+"""The docs tree must exist, be linked, and stay consistent with the
+code: tools/check_docs.py compares the docs/engines.md choice matrix
+against the check_choice sets (CI also runs it standalone)."""
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _tools():
+    sys.path.insert(0, os.path.join(_ROOT, "tools"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    return check_docs
+
+
+def test_engines_matrix_matches_code():
+    check_docs = _tools()
+    assert check_docs.check() == []
+
+
+def test_choice_matrix_parser_sees_all_knobs():
+    """A silently-unparsed table (markdown drift) must fail loudly, not
+    pass vacuously."""
+    check_docs = _tools()
+    doc = check_docs.documented_choices(check_docs.DOCS.read_text())
+    assert set(doc) >= set(check_docs.code_choices())
+
+
+@pytest.mark.parametrize(
+    "page", ["guidelines.md", "engines.md", "benchmarks.md"]
+)
+def test_docs_pages_exist_and_linked_from_readme(page):
+    path = os.path.join(_ROOT, "docs", page)
+    assert os.path.exists(path), page
+    with open(os.path.join(_ROOT, "README.md")) as f:
+        readme = f.read()
+    assert f"docs/{page}" in readme, f"README does not link docs/{page}"
+
+
+def test_guidelines_pointers_name_real_files():
+    """Every `src/...py:line`-style pointer in docs/guidelines.md must
+    reference a file that exists (line numbers may drift; files not)."""
+    import re
+
+    with open(os.path.join(_ROOT, "docs", "guidelines.md")) as f:
+        text = f.read()
+    paths = set(re.findall(r"`(src/[\w/]+\.py)(?::\d+)?`", text))
+    assert paths, "no code pointers found in guidelines.md"
+    for p in paths:
+        assert os.path.exists(os.path.join(_ROOT, p)), p

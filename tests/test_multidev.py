@@ -64,5 +64,10 @@ def test_sharded_rank_pallas_kernels():
 
 
 @pytest.mark.slow
+def test_sharded_frontier_cc_bit_exact():
+    _run("sharded_frontier")
+
+
+@pytest.mark.slow
 def test_sharded_trees_forest_and_tour():
     _run("sharded_trees")

@@ -1,0 +1,210 @@
+"""Sharded frontier-compacted CC: bit-exactness (labels, rounds, hook
+forests) vs the dense walk on a 1-device mesh, the frontier-driven
+sparse-exchange capacity, the overflow fallback, and the new dispatch
+rules. The real multi-device run lives in ``multidev_scripts.py
+sharded_frontier`` (8 fake devices need a fresh subprocess)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    connected_components,
+    frontier_shiloach_vishkin,
+    shiloach_vishkin,
+)
+from repro.distributed.graph import (
+    EXCHANGES,
+    frontier_sparse_capacity,
+    graph_mesh,
+    sharded_frontier_shiloach_vishkin,
+)
+from repro.ops.kiss import giant_dust_graph, list_graph, random_graph, tree_graph
+
+
+def _star(n):
+    return np.stack(
+        [np.zeros(n - 1, np.int32), np.arange(1, n, dtype=np.int32)], axis=1
+    )
+
+
+def _adversarial_families():
+    r = np.random.default_rng(7)
+    return {
+        "long-chain": (2000, list_graph(2000, 1, seed=1)),
+        "star": (1500, _star(1500)),
+        "giant+dust": (2000, giant_dust_graph(2000, 0.9, seed=2)),
+        "empty": (17, np.zeros((0, 2), np.int32)),
+        "all-self-loops": (9, np.stack([np.arange(9)] * 2, axis=1).astype(np.int32)),
+        "tree": (1200, tree_graph(1200, 3, seed=3)),
+        "random": (800, random_graph(800, 0.01, seed=4)),
+        "dense-multigraph": (150, r.integers(0, 150, (3000, 2)).astype(np.int32)),
+    }
+
+
+@pytest.mark.parametrize(
+    "family", sorted(_adversarial_families()), ids=lambda f: f
+)
+def test_bit_exact_vs_dense_and_frontier(family):
+    """Labels, round counts, AND hook forests match both the dense walk
+    and the single-device frontier engine (the cross-engine guarantee),
+    under the default sparse exchange."""
+    n, edges = _adversarial_families()[family]
+    mesh = graph_mesh(1)
+    ref, rounds_ref, (hu_ref, hv_ref) = shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, record_hooks=True
+    )
+    lab_f, rounds_f = frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, min_bucket=64
+    )
+    lab, rounds, (hu, hv) = sharded_frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, mesh=mesh, min_bucket=64,
+        record_hooks=True,
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(lab_f))
+    assert int(rounds) == int(rounds_ref) == int(rounds_f)
+    np.testing.assert_array_equal(np.asarray(hu), np.asarray(hu_ref))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(hv_ref))
+
+
+def test_dense_exchange_and_hook_kernel_bit_exact():
+    n, edges = 1200, tree_graph(1200, 3, seed=3)
+    mesh = graph_mesh(1)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    for kwargs in (
+        {"exchange": "dense"},
+        {"hook_impl": "pallas_interpret"},
+    ):
+        lab, rounds = sharded_frontier_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh, min_bucket=64, **kwargs
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lab), np.asarray(ref), err_msg=str(kwargs)
+        )
+        assert int(rounds) == int(rounds_ref), kwargs
+
+
+def test_frontier_driven_capacity_shrinks_with_buckets():
+    """The sparse buffer is sized per level from the live frontier: once
+    the bucket undercuts the fixed n/8 default, capacity follows it down
+    and the measured per-round exchange words drop with the frontier."""
+    n = 4000
+    edges = list_graph(n, 1, seed=5)
+    lab, rounds, st = sharded_frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, mesh=graph_mesh(1), min_bucket=64,
+        with_stats=True,
+    )
+    assert st.exchange == "sparse"
+    assert len(st.capacities) == len(st.levels)
+    for cap, (bucket, _r) in zip(st.capacities, st.levels):
+        assert cap == frontier_sparse_capacity(n, bucket)
+        assert cap <= max(64, n // 8)
+    # capacities only shrink (the bucket ladder is monotone)
+    assert st.capacities == sorted(st.capacities, reverse=True)
+    assert min(st.capacities) < n // 8  # the frontier actually drove it
+    # measured volumes: the last round's exchange undercuts the dense 3n
+    assert int(st.words_per_round[-1]) < 3 * n
+    # per-device visit accounting beats the dense sharded walk
+    dense = 2 * st.m2 * int(rounds)
+    assert st.edges_touched < dense / 2
+    sizes = [b for b, _ in st.levels]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_overflow_fallback_bit_exact_and_recorded():
+    """Force overflow with a tiny explicit capacity: labels/rounds stay
+    bit-exact and the stats record the dense-fallback rounds (words at
+    the dense 3n+3 level wherever the frontier exceeded capacity)."""
+    n = 2000
+    edges = giant_dust_graph(n, 0.9, seed=2)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    lab, rounds, st = sharded_frontier_shiloach_vishkin(
+        edges[:, 0], edges[:, 1], n, mesh=graph_mesh(1), min_bucket=64,
+        sparse_capacity=2, with_stats=True,
+    )
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(ref))
+    assert int(rounds) == int(rounds_ref)
+    # an explicit capacity is honoured verbatim at every level
+    assert st.capacities == [2] * len(st.levels)
+    # every round whose frontier exceeded capacity records the dense
+    # fallback: at least one of its three exchanges paid the full n
+    # words (each phase decides overflow for itself, so a round can mix
+    # a dense SV2 merge with a sparse SV3 merge)
+    over = st.frontier_per_round > 2
+    assert over.any()  # capacity 2 must overflow on this family
+    assert (st.words_per_round[over] > n).all()
+    # rounds that DID fit capacity stayed fully sparse (5C+3 words)
+    if (~over).any():
+        np.testing.assert_array_equal(
+            st.words_per_round[~over], 5 * 2 + 3
+        )
+
+
+def test_engine_dispatch_sharded_frontier():
+    n = 500
+    edges = list_graph(n, 3, seed=10)
+    mesh = graph_mesh(1)
+    ref, rounds_ref = shiloach_vishkin(edges[:, 0], edges[:, 1], n)
+    # auto + mesh -> sharded_frontier; explicit engine=; bucket knobs
+    for kwargs in (
+        {"mesh": mesh},
+        {"engine": "sharded_frontier"},
+        {"engine": "sharded_frontier", "mesh": mesh, "exchange": "dense"},
+        {"mesh": mesh, "min_bucket": 64},
+        {"mesh": mesh, "hook_impl": "pallas_interpret"},
+        {"min_bucket": 64, "exchange": "sparse"},  # composed, default mesh
+    ):
+        lab, rounds = connected_components(
+            edges[:, 0], edges[:, 1], n, **kwargs
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lab), np.asarray(ref), err_msg=str(kwargs)
+        )
+        assert int(rounds) == int(rounds_ref), kwargs
+    # the sampling pre-pass has no sharded counterpart
+    with pytest.raises(ValueError, match="single-device"):
+        connected_components(
+            edges[:, 0], edges[:, 1], n, mesh=mesh, sample_rounds=2
+        )
+    with pytest.raises(ValueError, match="single-device"):
+        connected_components(
+            edges[:, 0], edges[:, 1], n, engine="sharded_frontier", seed=1
+        )
+    # hook_impl pins a kernel hook path the dense sharded engine lacks
+    with pytest.raises(ValueError, match="sharded_frontier"):
+        connected_components(
+            edges[:, 0], edges[:, 1], n, engine="dense", mesh=mesh,
+            hook_impl="xla",
+        )
+    # inside jit, auto + mesh falls back to the traceable dense sharded walk
+    import jax
+
+    f = jax.jit(
+        lambda s, d: connected_components(s, d, n, mesh=mesh)[0]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(f(edges[:, 0], edges[:, 1])), np.asarray(ref)
+    )
+    # unknown strings still raise naming the choices
+    with pytest.raises(ValueError, match="sharded_frontier"):
+        connected_components(edges[:, 0], edges[:, 1], n, engine="bogus")
+    with pytest.raises(ValueError, match="'dense', 'sparse'"):
+        sharded_frontier_shiloach_vishkin(
+            edges[:, 0], edges[:, 1], n, mesh=mesh, exchange="bogus"
+        )
+    assert EXCHANGES == ("dense", "sparse")
+
+
+def test_spanning_forest_engine_independent_through_mesh():
+    """repro.trees consumes the hook record: the forest extracted via
+    the sharded frontier engine is bit-identical to the single-device
+    one (record_hooks=True guarantee)."""
+    from repro.core import spanning_forest
+
+    n = 800
+    edges = random_graph(n, 0.01, seed=4)
+    f_ref = spanning_forest(edges[:, 0], edges[:, 1], n, engine="dense")
+    f_sf = spanning_forest(edges[:, 0], edges[:, 1], n, mesh=graph_mesh(1))
+    np.testing.assert_array_equal(f_sf.labels, f_ref.labels)
+    np.testing.assert_array_equal(f_sf.edge_u, f_ref.edge_u)
+    np.testing.assert_array_equal(f_sf.edge_v, f_ref.edge_v)
+    assert f_sf.rounds == f_ref.rounds

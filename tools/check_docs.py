@@ -1,0 +1,108 @@
+"""Docs-consistency check: the choice matrix in docs/engines.md must
+equal the ``check_choice`` sets in the code, value for value and in the
+same order, so the documented matrix cannot rot.
+
+Parses the first (``choice-matrix``) table in docs/engines.md -- one
+row per knob, knob name as ```name=`` in the first cell, valid values
+as backticked tokens in the second cell -- and compares each row
+against the authoritative tuple in the code. Exits non-zero listing
+every mismatch. Run from the repo root:
+
+    PYTHONPATH=src python tools/check_docs.py
+
+CI runs this in both jax lanes; ``tests/test_docs.py`` wraps it so the
+tier-1 suite catches drift locally too.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = Path(__file__).resolve().parent.parent / "docs" / "engines.md"
+
+_ROW = re.compile(r"^\|\s*`(?P<knob>\w+)=`\s*\|(?P<values>[^|]*)\|")
+_TOKEN = re.compile(r"`([^`]+)`")
+
+
+def documented_choices(text: str) -> dict[str, tuple[str, ...]]:
+    """{knob: ordered value tuple} from the choice-matrix table rows.
+
+    Only the table following the ``<!-- choice-matrix`` marker counts
+    (docs/engines.md has other tables -- numeric knobs, guarantees --
+    whose rows are not choice sets); parsing stops at the next
+    heading."""
+    out = {}
+    in_matrix = False
+    for line in text.splitlines():
+        if "<!-- choice-matrix" in line:
+            in_matrix = True
+            continue
+        if in_matrix and line.startswith("#"):
+            break
+        if not in_matrix:
+            continue
+        m = _ROW.match(line.strip())
+        if not m or m.group("knob") in out:
+            continue
+        values = tuple(_TOKEN.findall(m.group("values")))
+        if values:
+            out[m.group("knob")] = values
+    return out
+
+
+def code_choices() -> dict[str, tuple[str, ...]]:
+    """The authoritative dispatch sets, straight from the code."""
+    from repro.core import __init__ as _  # noqa: F401  (package import)
+    import repro.core as core
+    from repro.core.components import HOOK_IMPLS
+    from repro.core.list_ranking import KERNEL_IMPLS, PACK_MODES
+    from repro.distributed.graph import EXCHANGES
+    from repro.trees import RANK_ENGINES
+
+    return {
+        "engine": tuple(core._CC_ENGINES),
+        "kernel_impl": tuple(KERNEL_IMPLS),
+        "hook_impl": tuple(HOOK_IMPLS),
+        "exchange": tuple(EXCHANGES),
+        "rank_engine": tuple(RANK_ENGINES),
+        "pack_mode": tuple(PACK_MODES),
+    }
+
+
+def check() -> list[str]:
+    """Returns a list of human-readable problems (empty = consistent)."""
+    doc = documented_choices(DOCS.read_text())
+    code = code_choices()
+    problems = []
+    for knob, want in sorted(code.items()):
+        got = doc.get(knob)
+        if got is None:
+            problems.append(
+                f"{knob}=: no choice-matrix row in docs/engines.md "
+                f"(code has {want})"
+            )
+        elif got != want:
+            problems.append(
+                f"{knob}=: docs/engines.md says {got}, code says {want}"
+            )
+    for knob in sorted(set(doc) - set(code)):
+        problems.append(
+            f"{knob}=: documented in docs/engines.md but unknown to "
+            "tools/check_docs.py -- add it to code_choices()"
+        )
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(f"DOCS INCONSISTENT: {p}", file=sys.stderr)
+    if not problems:
+        print(f"docs/engines.md choice matrix consistent "
+              f"({len(code_choices())} knobs)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""Wave-batched graph serving vs one-request-at-a-time.
+
+Replays a KISS-deterministic stream of small independent graph requests
+(``data/graphs.graph_request_stream`` -- the many-small-molecule-graphs
+serving workload) through ``repro.serve.GraphServeEngine`` twice: once
+wave-batched (``max_requests=16``) and once with ``max_requests=1``,
+which is the same code path serving one request per wave -- the honest
+one-request-at-a-time baseline (it still buckets, so the baseline's
+compiles are amortized too; the win measured here is batching, not
+compile caching).
+
+Emits wall time per REQUEST plus the deterministic batching counters
+the serve layer guarantees -- requests/wave, padded-slot waste
+(node/edge), and bucket compiles (one set of compiled programs per
+(stage, node_cap, edge_cap) bucket) -- which ``run.py --check``
+guards against the committed ``BENCH_smoke.json`` in both CI lanes.
+Wall-derived numbers (the speedup) are printed as comments only: the
+counters in ``derived`` must be deterministic at a given scale.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.data.graphs import graph_request_stream
+from repro.serve import GraphRequest, GraphServeEngine
+
+
+def _serve(stream, max_requests: int) -> GraphServeEngine:
+    eng = GraphServeEngine(max_requests=max_requests)
+    for i, g in enumerate(stream):
+        eng.submit(GraphRequest(uid=i, **g))
+    eng.run()
+    return eng
+
+
+def run(num_requests: int | None = None) -> list[str]:
+    R = num_requests or max(8, int(1600 * SCALE))
+    lines = []
+    for kind, family in (("cc", "random"), ("analytics", "tree")):
+        stream = graph_request_stream(R, kind=kind, family=family, seed=11)
+        t_batch = time_fn(lambda: _serve(stream, 16), iters=2)
+        eng = _serve(stream, 16)
+        lines.append(emit(
+            f"graph_serve/batched/{kind}/{family}/req={R}",
+            t_batch / R * 1e6,
+            f"waves={eng.waves};req_per_wave={eng.requests_per_wave:.2f};"
+            f"compiles={eng.bucket_compiles};"
+            f"node_waste={eng.node_pad_waste:.3f};"
+            f"edge_waste={eng.edge_pad_waste:.3f}",
+        ))
+        t_solo = time_fn(lambda: _serve(stream, 1), iters=2)
+        solo = _serve(stream, 1)
+        lines.append(emit(
+            f"graph_serve/solo/{kind}/{family}/req={R}",
+            t_solo / R * 1e6,
+            f"waves={solo.waves};compiles={solo.bucket_compiles}",
+        ))
+        print(
+            f"# graph_serve {kind}/{family}: batched "
+            f"{t_batch / R * 1e6:.0f} us/req vs solo "
+            f"{t_solo / R * 1e6:.0f} us/req "
+            f"({t_solo / max(t_batch, 1e-12):.2f}x)",
+            flush=True,
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

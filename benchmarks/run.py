@@ -123,6 +123,7 @@ def main(argv=None) -> None:
         fig4_cc,
         fig5_parallelism,
         fig6_rounds,
+        graph_serve,
         moe_dispatch,
         multidev_scaling,
         roofline_table,
@@ -139,6 +140,7 @@ def main(argv=None) -> None:
         ("fig4_cc", fig4_cc.run),
         ("cc_frontier", cc_frontier.run),
         ("tree_ops", tree_ops.run),
+        ("graph_serve", graph_serve.run),
         ("fig5_parallelism", fig5_parallelism.run),
         ("fig6_rounds", fig6_rounds.run),
         ("moe_dispatch", moe_dispatch.run),

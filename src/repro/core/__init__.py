@@ -328,6 +328,26 @@ def tree_analytics(src, dst, num_nodes, **kwargs):
     return _ta(src, dst, num_nodes, **kwargs)
 
 
+def serve_graphs(requests, **kwargs):
+    """Serve many small graph requests wave-batched: one padded
+    disjoint-union engine call per wave, bit-exact vs issuing each
+    request alone -- see ``repro.serve.graph.GraphServeEngine``.
+
+    ``requests`` is an iterable of ``repro.serve.GraphRequest``;
+    ``kwargs`` are the engine knobs (``engine=`` / ``rank_engine=`` /
+    ``kernel_impl=`` / ``mesh=`` dispatch exactly as in the functions
+    above, plus the wave/bucket capacity knobs -- full matrix in
+    ``docs/engines.md`` and ``docs/serving.md``). Returns the finished
+    requests with ``result`` populated, in completion order.
+    """
+    from repro.serve.graph import GraphServeEngine
+
+    eng = GraphServeEngine(**kwargs)
+    for r in requests:
+        eng.submit(r)
+    return eng.run()
+
+
 __all__ = [
     "connected_components",
     "list_rank",
@@ -335,6 +355,7 @@ __all__ = [
     "euler_tour",
     "root_tree",
     "tree_analytics",
+    "serve_graphs",
     "check_choice",
     "wylie_rank",
     "random_splitter_rank",

@@ -195,6 +195,48 @@ def random_tree_forest(
     return np.concatenate(edges, axis=0).astype(np.int32)
 
 
+def graph_request_stream(
+    num_requests: int,
+    *,
+    min_nodes: int = 6,
+    max_nodes: int = 40,
+    edge_factor: float = 1.5,
+    kind: str = "analytics",
+    family: str = "random",
+    seed: int = 0,
+) -> list[dict]:
+    """A KISS-deterministic stream of small independent graph requests
+    -- the ``repro.serve.graph`` workload (many small molecule-scale
+    graphs, one request each, NOT a pre-unioned batch like
+    ``molecule_batch``). Each entry is ``{"src", "dst", "num_nodes",
+    "kind"}``; sizes are KISS-uniform in ``[min_nodes, max_nodes]``.
+
+    ``family="random"`` draws ``edge_factor * n`` uniform endpoint
+    pairs (self-loops/duplicates included, as real request traffic has
+    them); ``family="tree"`` builds uniform-attachment random trees
+    (``random_tree``), the forest-shaped traffic the tree-analytics
+    stage is tuned for.
+    """
+    if family not in ("random", "tree"):
+        raise ValueError(f"unknown family {family!r}")
+    rng = KissRng(seed, 4096)
+    spans = rng.uniform_ints((max(num_requests, 1),),
+                             max_nodes - min_nodes + 1)
+    out = []
+    for i in range(num_requests):
+        n = min_nodes + int(spans[i])
+        if family == "tree":
+            edges = random_tree(n, seed=seed * 9973 + i + 1)
+            src, dst = edges[:, 0].copy(), edges[:, 1].copy()
+        else:
+            m = max(1, int(edge_factor * n))
+            ends = KissRng(seed * 9973 + i + 1, 1024).uniform_ints((m, 2), n)
+            src = ends[:, 0].astype(np.int32)
+            dst = ends[:, 1].astype(np.int32)
+        out.append({"src": src, "dst": dst, "num_nodes": n, "kind": kind})
+    return out
+
+
 def random_succ(n: int, seed: int = 0) -> np.ndarray:
     """Random linked-list succ[] with head 0 and self-loop terminal.
 

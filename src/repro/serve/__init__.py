@@ -1,4 +1,23 @@
-"""LM serving engine: continuous-batching decode over the KV-cache API."""
-from repro.serve.engine import Request, ServeEngine
+"""Serving engines: wave-batched LM decode and graph-analytics serving
+over one shared wave scheduler (``serve/waves.py``)."""
+from repro.serve.engine import OVERFLOW_POLICIES, Request, ServeEngine
+from repro.serve.graph import (
+    KINDS,
+    GraphRequest,
+    GraphResult,
+    GraphServeEngine,
+    WaveRecord,
+)
+from repro.serve.waves import WaveScheduler
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "OVERFLOW_POLICIES",
+    "GraphRequest",
+    "GraphResult",
+    "GraphServeEngine",
+    "WaveRecord",
+    "KINDS",
+    "WaveScheduler",
+]

@@ -4,9 +4,23 @@ Batched request scheduling adapted to static JAX shapes: the engine owns a
 fixed (num_slots, max_len) KV cache; up to ``num_slots`` requests are
 admitted per WAVE, prefilled token-by-token through the same jitted
 ``serve_step`` used for decode (one compilation total), and the wave
-retires when every member finishes (EOS / token budget). Early-finishing
-slots idle masked -- the branch-free analogue of the paper's lockstep walk:
-all lanes step together, finished lanes burn no semantics.
+retires when every member finishes (EOS / token budget / cache end).
+Early-finishing slots idle masked -- the branch-free analogue of the
+paper's lockstep walk: all lanes step together, finished lanes burn no
+semantics. The outer queue -> wave -> finished loop is the shared
+``serve/waves.WaveScheduler`` (the graph-analytics engine in
+``serve/graph.py`` runs the same scheduler under a different capacity
+model).
+
+Capacity contract (validated at ``submit``, never silently violated by
+the wave loop): a prompt of P tokens occupies cache rows 0..P-1 during
+prefill, the first output token is predicted off row P-1, and each
+further token must be fed back through a fresh row -- so P <= max_len
+is required to emit anything at all, and the most a request can ever
+get is ``max_len - P + 1`` tokens (the run that writes the final cache
+row). Overlong prompts either raise (``on_overflow="error"``) or keep
+their last ``max_len`` tokens with ``req.truncated`` set
+(``on_overflow="truncate"``).
 
 Per-slot-position continuous batching (vLLM-style slot reuse mid-wave)
 needs a vector-position cache API; recorded in DESIGN.md section Next. The
@@ -21,9 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.components import check_choice
 from repro.models.transformer import init_kv_cache, serve_step
+from repro.serve.waves import WaveScheduler
 
 Array = jax.Array
+
+OVERFLOW_POLICIES = ("error", "truncate")
 
 
 @dataclass
@@ -34,23 +52,61 @@ class Request:
     eos_id: int | None = None
     output: list[int] = field(default_factory=list)
     done: bool = False
+    truncated: bool = False  # prompt clipped by on_overflow="truncate"
 
 
-class ServeEngine:
-    def __init__(self, params, cfg, *, num_slots: int = 4, max_len: int = 256):
+class ServeEngine(WaveScheduler):
+    def __init__(
+        self,
+        params,
+        cfg,
+        *,
+        num_slots: int = 4,
+        max_len: int = 256,
+        on_overflow: str = "error",
+    ):
+        check_choice("on_overflow", on_overflow, OVERFLOW_POLICIES)
+        super().__init__()
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
+        self.on_overflow = on_overflow
         self._step = jax.jit(lambda p, c, t, i: serve_step(p, cfg, c, t, i))
-        self.waves = 0
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        """Admit a request, enforcing the cache-capacity contract.
+
+        ``max_new_tokens <= 0`` requests finish immediately (empty
+        output) instead of burning a wave slot; prompts longer than
+        ``max_len`` could never emit a token, so they raise (or are
+        truncated to their last ``max_len`` tokens under
+        ``on_overflow="truncate"``) rather than exhausting the wave
+        loop with ``done=False`` -- the silent-drop failure mode.
+        """
+        if not req.prompt:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens <= 0:
+            req.done = True
+            self.finished.append(req)
+            return
+        if len(req.prompt) > self.max_len:
+            if self.on_overflow == "error":
+                raise ValueError(
+                    f"request {req.uid}: prompt length {len(req.prompt)} "
+                    f"exceeds max_len={self.max_len} (no room to emit a "
+                    "token); shorten it or use on_overflow='truncate'"
+                )
+            req.prompt = list(req.prompt[-self.max_len:])
+            req.truncated = True
+        super().submit(req)
 
     # ------------------------------------------------------------------
+    def _next_wave(self) -> list[Request]:
+        wave = self.queue[: self.num_slots]
+        self.queue = self.queue[self.num_slots:]
+        return wave
+
     def _run_wave(self, wave: list[Request]):
         cache = init_kv_cache(self.cfg, self.num_slots, self.max_len)
         pending = [list(r.prompt) for r in wave]
@@ -81,18 +137,16 @@ class ServeEngine:
                 if (
                     len(r.output) >= r.max_new_tokens
                     or (r.eos_id is not None and tok == r.eos_id)
-                    or pos + 2 >= self.max_len
+                    # continuing needs row pos + 1 for the fed-back token:
+                    # retire only once that row would fall off the cache,
+                    # so the final row is usable like any other.
+                    or pos + 2 > self.max_len
                 ):
                     r.done = True
                     active[s] = False
             pos += 1
-        self.finished.extend(wave)
-        self.waves += 1
 
     def run(self) -> list[Request]:
-        """Process the whole queue; returns finished requests in order."""
-        while self.queue:
-            wave = self.queue[: self.num_slots]
-            self.queue = self.queue[self.num_slots :]
-            self._run_wave(wave)
-        return self.finished
+        """Process the whole queue; returns finished requests in
+        completion order (zero-budget requests finish at submit)."""
+        return super().run()

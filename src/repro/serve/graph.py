@@ -1,0 +1,350 @@
+"""Wave-batched graph-analytics serving over the ``repro.core`` engines.
+
+The target workload is the ROADMAP's "many small molecule graphs per
+call": a stream of independent little CC / spanning-forest / tree-
+analytics requests that would each waste an accelerator dispatch (and,
+worse, a compilation per odd shape) if issued alone. The engine applies
+the paper's central lesson -- keep device work branch-free and
+shape-static so irregular graph inputs never force recompilation -- to
+serving:
+
+* requests queue up and are admitted in FIFO order into WAVES under a
+  node/edge budget (``serve/waves.WaveScheduler``, the same outer loop
+  as the LM token engine);
+* each wave is packed into ONE disjoint-union graph by node/edge offset
+  packing -- request i's nodes become ``[node_off[i], node_off[i] +
+  n_i)`` -- then padded to a power-of-two **capacity bucket**
+  (``core/frontier.next_pow2`` on nodes and edges; pad nodes are
+  isolated, pad edges are inert (0, 0) self-loops, and the analytics
+  stage pads its forest-edge buffer to the node capacity so the tour
+  ranks at the fixed ``2 * node_cap`` arc capacity of
+  ``trees/tour.tour_capacity``'s convention);
+* the packed union runs through the existing engines as one batched
+  device program per wave stage -- ``connected_components`` /
+  ``spanning_forest`` / ``tree_analytics`` with ``dedup=False`` so
+  shapes stay bucket-static -- and results are unpacked per request by
+  offset.
+
+**Bit-exactness.** CC, spanning forests, and Euler-tour analytics over
+a disjoint union decompose per component: every SV hook compares labels
+only within a component, labels are per-request node ids shifted by the
+request's node offset (min node id is offset-shifted), the recorded
+hook edges of request i are exactly its solo hook edges shifted, and
+the tour's stable source-sort preserves each request's arc order. Pad
+nodes are isolated self-components, pad self-loop edges can never hook,
+and ``record_hooks`` / extra converged rounds are label-neutral -- so
+every unpacked result is bit-identical to issuing the request alone
+with the same engine knobs (asserted in ``tests/test_serve_graph.py``;
+per-request ``rounds`` is the one quantity that does NOT decompose --
+the union runs to the slowest member -- so it is reported per wave, not
+per request).
+
+**Compile accounting.** All device programs in a wave are keyed only by
+the wave's ``(stage, node_cap, edge_cap)`` bucket, so the jit caches
+compile once per bucket and every later wave in that bucket reuses
+them. ``engine="auto"`` resolves to ``"dense"`` on a single device: the
+auto dispatch's Afforest sampling policy keys on edge density, which
+packing changes, and its frontier ladder adds data-dependent inner
+bucket compiles -- both would break the serve path's bit-exactness and
+compile-count guarantees. Any explicitly pinned engine is honoured
+(the frontier/sharded engines stay bit-exact; their host-driven ladders
+add at most log2(edge_cap) bounded extra compiles per bucket).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.components import check_choice
+from repro.core.frontier import next_pow2
+from repro.serve.waves import WaveScheduler
+
+# Request kinds, in pipeline-stage order: each stage subsumes the ones
+# before it, so a mixed wave runs the deepest stage any member needs
+# (record_hooks and the tour stages are label-neutral by construction).
+KINDS = ("cc", "forest", "analytics")
+_STAGE = {k: i for i, k in enumerate(KINDS)}
+
+
+@dataclass
+class GraphResult:
+    """Per-request outputs, unpacked to request-local node ids.
+
+    ``labels``/``num_components`` are filled for every kind;
+    ``edge_u``/``edge_v`` (the spanning forest, in solo edge order) from
+    kind ``"forest"`` up; the tree-analytics arrays only for
+    ``"analytics"``.
+    """
+
+    labels: np.ndarray
+    num_components: int
+    edge_u: np.ndarray | None = None
+    edge_v: np.ndarray | None = None
+    parent: np.ndarray | None = None
+    depth: np.ndarray | None = None
+    subtree_size: np.ndarray | None = None
+    preorder: np.ndarray | None = None
+    postorder: np.ndarray | None = None
+
+
+@dataclass
+class GraphRequest:
+    uid: int
+    src: np.ndarray
+    dst: np.ndarray
+    num_nodes: int
+    kind: str = "analytics"
+    result: GraphResult | None = None
+    done: bool = False
+
+    @property
+    def num_edges(self) -> int:
+        return int(len(self.src))
+
+
+@dataclass
+class WaveRecord:
+    """Deterministic per-wave accounting (benchmarks/graph_serve)."""
+
+    requests: int
+    stage: str
+    num_nodes: int  # live union nodes
+    num_edges: int  # live union edges
+    node_cap: int
+    edge_cap: int
+    new_bucket: bool  # first wave in this (stage, node_cap, edge_cap)
+    rounds: int  # SV rounds of the union run (max over members)
+
+
+class GraphServeEngine(WaveScheduler):
+    """Admit many small graph requests; serve each wave as one padded
+    batched engine call. See the module docstring for the packing /
+    bucketing / exactness model and ``docs/serving.md`` for knobs.
+
+    * ``max_requests`` (default 16), ``max_nodes`` (4096), ``max_edges``
+      (16384) -- wave admission budget; a single request beyond the
+      node/edge budget is rejected at ``submit`` (never silently
+      dropped later).
+    * ``min_nodes`` (64) / ``min_edges`` (128) -- bucket floor, so tiny
+      waves share one small-bucket compilation instead of one per size.
+    * ``engine=`` / ``rank_engine=`` / ``kernel_impl=`` /
+      ``num_splitters=`` / ``mesh=`` and any extra engine kwargs
+      (``hook_impl=``, ``exchange=``, ``min_bucket=``, ...) dispatch
+      exactly as in ``repro.core`` (full matrix: ``docs/engines.md``),
+      except ``engine="auto"`` resolves to ``"dense"`` on one device
+      (see module docstring) and the sampling pre-pass
+      (``sample_rounds``) is rejected: it re-roots components by edge
+      density, which packing changes -- it would break batched == solo.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_requests: int = 16,
+        max_nodes: int = 4096,
+        max_edges: int = 16384,
+        min_nodes: int = 64,
+        min_edges: int = 128,
+        engine: str = "auto",
+        rank_engine: str = "auto",
+        kernel_impl: str = "auto",
+        num_splitters: int | None = None,
+        mesh=None,
+        **engine_kwargs,
+    ):
+        import repro.core as core
+        from repro.core.list_ranking import KERNEL_IMPLS
+        from repro.trees.compute import RANK_ENGINES
+
+        check_choice("engine", engine, core._CC_ENGINES)
+        check_choice("rank_engine", rank_engine, RANK_ENGINES)
+        check_choice("kernel_impl", kernel_impl, KERNEL_IMPLS)
+        bad = {
+            "sample_rounds", "seed", "dedup", "record_hooks", "with_stats",
+        } & set(engine_kwargs)
+        if bad:
+            raise ValueError(
+                f"{sorted(bad)} are not servable knobs: the serve path "
+                "fixes dedup/record_hooks itself and the sampling "
+                "pre-pass would break batched == solo bit-exactness"
+            )
+        super().__init__()
+        self.max_requests = max_requests
+        self.max_nodes = max_nodes
+        self.max_edges = max_edges
+        self.min_nodes = min_nodes
+        self.min_edges = min_edges
+        if engine == "auto" and mesh is None and jax.device_count() == 1:
+            engine = "dense"
+        self.engine = engine
+        self.rank_engine = rank_engine
+        self.kernel_impl = kernel_impl
+        self.num_splitters = num_splitters
+        self.mesh = mesh
+        self.engine_kwargs = dict(engine_kwargs)
+        self.wave_records: list[WaveRecord] = []
+        self._buckets: set[tuple[str, int, int]] = set()
+
+    # -- deterministic counters (guarded by benchmarks/run.py --check) --
+    @property
+    def bucket_compiles(self) -> int:
+        """Distinct (stage, node_cap, edge_cap) buckets instantiated --
+        each is one set of jit-cache entries, reused by every later
+        wave in the bucket."""
+        return len(self._buckets)
+
+    @property
+    def requests_per_wave(self) -> float:
+        recs = self.wave_records
+        return sum(r.requests for r in recs) / len(recs) if recs else 0.0
+
+    @property
+    def node_pad_waste(self) -> float:
+        """Padded node slots that carried no request, as a fraction."""
+        recs = self.wave_records
+        cap = sum(r.node_cap for r in recs)
+        return 1.0 - sum(r.num_nodes for r in recs) / cap if cap else 0.0
+
+    @property
+    def edge_pad_waste(self) -> float:
+        recs = self.wave_records
+        cap = sum(r.edge_cap for r in recs)
+        return 1.0 - sum(r.num_edges for r in recs) / cap if cap else 0.0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: GraphRequest):
+        """Validate and enqueue. Rejections happen HERE, loudly -- a
+        request that could never fit a wave must not reach the wave
+        loop (the LM engine's overlong-prompt lesson)."""
+        check_choice("kind", req.kind, KINDS)
+        if req.num_nodes < 1:
+            raise ValueError(f"request {req.uid}: num_nodes must be >= 1")
+        req.src = np.asarray(req.src, np.int32).ravel()
+        req.dst = np.asarray(req.dst, np.int32).ravel()
+        if req.src.shape != req.dst.shape:
+            raise ValueError(
+                f"request {req.uid}: src/dst length mismatch "
+                f"({req.src.shape} vs {req.dst.shape})"
+            )
+        if req.num_nodes > self.max_nodes or req.num_edges > self.max_edges:
+            raise ValueError(
+                f"request {req.uid}: {req.num_nodes} nodes / "
+                f"{req.num_edges} edges exceeds the wave budget "
+                f"(max_nodes={self.max_nodes}, max_edges={self.max_edges})"
+            )
+        if req.num_edges and (
+            int(min(req.src.min(), req.dst.min())) < 0
+            or int(max(req.src.max(), req.dst.max())) >= req.num_nodes
+        ):
+            raise ValueError(
+                f"request {req.uid}: edge endpoints outside "
+                f"[0, {req.num_nodes})"
+            )
+        super().submit(req)
+
+    def _next_wave(self) -> list[GraphRequest]:
+        """FIFO greedy packing under the node/edge budget."""
+        wave: list[GraphRequest] = []
+        nodes = edges = 0
+        while self.queue and len(wave) < self.max_requests:
+            r = self.queue[0]
+            if wave and (
+                nodes + r.num_nodes > self.max_nodes
+                or edges + r.num_edges > self.max_edges
+            ):
+                break
+            wave.append(self.queue.pop(0))
+            nodes += r.num_nodes
+            edges += r.num_edges
+        return wave
+
+    def _run_wave(self, wave: list[GraphRequest]):
+        from repro.core import connected_components, num_components
+        from repro.trees import spanning_forest, tree_analytics
+
+        stage = KINDS[max(_STAGE[r.kind] for r in wave)]
+        node_off = np.cumsum([0] + [r.num_nodes for r in wave])
+        n_union = int(node_off[-1])
+        m_union = sum(r.num_edges for r in wave)
+        node_cap = max(self.min_nodes, next_pow2(n_union))
+        edge_cap = max(self.min_edges, next_pow2(max(m_union, 1)))
+        src = np.zeros((edge_cap,), np.int32)  # pad: inert (0,0) self-loops
+        dst = np.zeros((edge_cap,), np.int32)
+        eo = 0
+        for r, o in zip(wave, node_off):
+            src[eo:eo + r.num_edges] = r.src + o
+            dst[eo:eo + r.num_edges] = r.dst + o
+            eo += r.num_edges
+
+        bucket = (stage, node_cap, edge_cap)
+        new_bucket = bucket not in self._buckets
+        self._buckets.add(bucket)
+
+        kw = dict(
+            self.engine_kwargs, engine=self.engine, mesh=self.mesh,
+            dedup=False,
+        )
+        ta = None
+        if stage == "cc":
+            labels, rounds = connected_components(src, dst, node_cap, **kw)
+            labels = np.asarray(labels)
+            edge_u = edge_v = None
+        elif stage == "forest":
+            forest = spanning_forest(src, dst, node_cap, **kw)
+            labels, rounds = forest.labels, forest.rounds
+            edge_u, edge_v = forest.edge_u, forest.edge_v
+        else:
+            ta = tree_analytics(
+                src, dst, node_cap,
+                rank_engine=self.rank_engine,
+                kernel_impl=self.kernel_impl,
+                num_splitters=self.num_splitters,
+                pad_edges_to=node_cap,
+                **kw,
+            )
+            labels, rounds = ta.forest.labels, ta.forest.rounds
+            edge_u, edge_v = ta.forest.edge_u, ta.forest.edge_v
+            parent = np.asarray(ta.parent)
+            depth = np.asarray(ta.depth)
+            size = np.asarray(ta.subtree_size)
+            pre = np.asarray(ta.computations.preorder)
+            post = np.asarray(ta.computations.postorder)
+        labels = np.asarray(labels)
+
+        for r, o in zip(wave, node_off):
+            hi = o + r.num_nodes
+            lab = labels[o:hi] - o
+            res = GraphResult(
+                labels=lab.astype(np.int32),
+                num_components=num_components(lab),
+            )
+            # fill only the fields the request's OWN kind asked for --
+            # stage promotion must not leak wave-mate-dependent extras
+            if edge_u is not None and _STAGE[r.kind] >= _STAGE["forest"]:
+                # request i's forest edges are the hook slots of its own
+                # node range, already in solo (hooked-tree id) order
+                m = (edge_u >= o) & (edge_u < hi)
+                res.edge_u = (edge_u[m] - o).astype(np.int32)
+                res.edge_v = (edge_v[m] - o).astype(np.int32)
+            if ta is not None and r.kind == "analytics":
+                res.parent = (parent[o:hi] - o).astype(np.int32)
+                res.depth = depth[o:hi]
+                res.subtree_size = size[o:hi]
+                res.preorder = pre[o:hi]
+                res.postorder = post[o:hi]
+            r.result = res
+            r.done = True
+
+        self.wave_records.append(WaveRecord(
+            requests=len(wave), stage=stage,
+            num_nodes=n_union, num_edges=m_union,
+            node_cap=node_cap, edge_cap=edge_cap,
+            new_bucket=new_bucket, rounds=int(rounds),
+        ))
+
+    def run(self) -> list[GraphRequest]:
+        """Process the whole queue; returns finished requests with
+        ``result`` populated, in completion order."""
+        return super().run()

@@ -1,0 +1,56 @@
+"""Shared wave/slot machinery for the serving engines.
+
+Both serving engines — the LM token engine (``serve/engine.py``) and the
+graph-analytics engine (``serve/graph.py``) — run the same outer loop:
+requests queue up, a WAVE of them is admitted under a static capacity,
+the whole wave runs as one shape-static batched device program, and the
+wave retires together (the branch-free analogue of the paper's lockstep
+walk: all lanes step together, finished lanes burn no semantics). This
+module owns that loop so the two engines only differ in (a) how a wave
+is formed under their capacity model and (b) what running a wave means.
+
+Subclasses implement:
+
+* ``_next_wave()`` — pop the next wave off ``self.queue`` (FIFO; a
+  subclass may stop early when its capacity budget fills, but must make
+  progress whenever the queue is nonempty);
+* ``_run_wave(wave)`` — execute the wave and write per-request results
+  onto the request objects (``done`` flags included).
+
+``submit`` is overridable for admission-time validation — the one place
+a request can be rejected loudly instead of being silently dropped by
+an exhausted wave loop later.
+"""
+from __future__ import annotations
+
+
+class WaveScheduler:
+    """Queue -> waves -> finished, with a per-run wave counter."""
+
+    def __init__(self):
+        self.queue: list = []
+        self.finished: list = []
+        self.waves = 0
+
+    def submit(self, req) -> None:
+        """Admit a request to the queue. Subclasses validate here."""
+        self.queue.append(req)
+
+    def _next_wave(self) -> list:
+        """Pop the next wave (nonempty while the queue is) off the queue."""
+        raise NotImplementedError
+
+    def _run_wave(self, wave: list) -> None:
+        raise NotImplementedError
+
+    def run(self) -> list:
+        """Process the whole queue; returns finished requests in
+        completion order (requests finished at submit time first)."""
+        while self.queue:
+            wave = self._next_wave()
+            if not wave:  # defensive: a stuck _next_wave would spin
+                raise RuntimeError("_next_wave returned an empty wave")
+            self._run_wave(wave)
+            self.finished.extend(wave)
+            self.waves += 1
+        return self.finished

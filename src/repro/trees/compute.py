@@ -58,8 +58,12 @@ def tour_splitters(
     ``select_splitters``'s single-list convention."""
     L = tour.capacity
     if tour.num_arcs:
+        # mask, don't slice: padded-edge-buffer tours interleave dead
+        # self-loop arcs with the real ones (see ``euler_tour``)
         heads = np.unique(
-            np.asarray(tour.head_of_arc[: tour.num_arcs], dtype=np.int64)
+            np.asarray(tour.head_of_arc, dtype=np.int64)[
+                np.asarray(tour.valid)
+            ]
         )
     else:
         heads = np.zeros((0,), np.int64)
@@ -292,6 +296,7 @@ def tree_analytics(
     kernel_impl: str = "auto",
     num_splitters: int | None = None,
     pad_to: int | None = None,
+    pad_edges_to: int | None = None,
     mesh=None,
     seed: int = 0,
     **cc_kwargs,
@@ -316,6 +321,13 @@ def tree_analytics(
       variable-size requests compile once (see ``tour_capacity``); a
       forest of many small graphs (e.g. ``data/graphs.molecule_batch``)
       is one batched call.
+    * ``pad_edges_to=`` (int, default None) -- pads the extracted
+      forest-edge buffer to a fixed capacity before touring, so the
+      tour/compute stages compile per CAPACITY instead of per live
+      forest-edge count (the data-dependent quantity); this is what
+      lets ``repro.serve.graph`` run every wave of a capacity bucket
+      through one compiled program. Implies a tour capacity of
+      ``2 * pad_edges_to`` unless ``pad_to`` raises it.
     * ``mesh=`` -- threads to BOTH the CC engine and the ranking engine
       (the all-sharded path end to end).
 
@@ -325,9 +337,21 @@ def tree_analytics(
     forest = spanning_forest(
         src, dst, num_nodes, engine=engine, mesh=mesh, **cc_kwargs
     )
+    edge_u, edge_v, num_edges = forest.edge_u, forest.edge_v, None
+    if pad_edges_to is not None:
+        f = forest.num_edges
+        if f > pad_edges_to:
+            raise ValueError(
+                f"pad_edges_to={pad_edges_to} below the {f} forest edges"
+            )
+        num_edges = f
+        edge_u = np.zeros((pad_edges_to,), np.int32)
+        edge_v = np.zeros((pad_edges_to,), np.int32)
+        edge_u[:f] = forest.edge_u
+        edge_v[:f] = forest.edge_v
     tour = euler_tour(
-        forest.edge_u, forest.edge_v, num_nodes,
-        labels=forest.labels, pad_to=pad_to,
+        edge_u, edge_v, num_nodes,
+        labels=forest.labels, pad_to=pad_to, num_edges=num_edges,
     )
     comp = tree_computations(
         tour, rank_engine=rank_engine, kernel_impl=kernel_impl,

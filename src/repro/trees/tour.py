@@ -33,7 +33,9 @@ class EulerTour:
 
     ``succ`` is the tour successor over arc ids (terminal arcs and
     padded slots are self-loops), ready for list ranking. ``valid``
-    masks the first ``num_arcs`` real arcs; padded tail slots are inert
+    masks the ``num_arcs`` real arcs -- a contiguous prefix unless the
+    tour was built over a padded edge buffer (``num_edges=``), so
+    consumers mask by it rather than slicing. Padded slots are inert
     self-loops at node 0 so every downstream op stays branch-free.
     """
 
@@ -42,8 +44,8 @@ class EulerTour:
     arc_dst: Array  # (L,) int32 destination node per arc
     twin: Array  # (L,) int32 opposite-orientation arc (self for padding)
     head_of_arc: Array  # (L,) int32 head arc of the arc's own tour
-    valid: Array  # (L,) bool, False on padded slots
-    num_arcs: int  # 2f real arcs (pre-padding)
+    valid: Array  # (L,) bool, False on padded/dead slots
+    num_arcs: int  # 2 * num_edges real arcs (pre-padding)
     num_nodes: int
     labels: Array  # (n,) int32 component label per node
     root_of: Array  # (n,) int32 tree root per node (= labels unless re-rooted)
@@ -62,30 +64,53 @@ def tour_capacity(num_edges: int, min_capacity: int = 16) -> int:
 
 
 @partial(jax.jit, static_argnames=("n", "f", "pad"))
-def _build_tour(u, v, root_of, *, n, f, pad):
+def _build_tour(u, v, root_of, k, *, n, f, pad):
+    """Tour arrays over a (possibly edge-padded) forest edge buffer.
+
+    ``f`` is the STATIC buffer length -- the compile key -- while ``k``
+    (traced int32) is the live edge count: slots ``k..f`` of ``u``/``v``
+    are inert padding, so variable-size forests served at one buffer
+    capacity share ONE compiled program (the batch-serving convention;
+    ``k == f`` is the exact, unpadded case). Dead edge slots become
+    self-loop arcs grouped under a virtual node ``n`` so they sort past
+    every real adjacency group and never perturb the twin-next rule.
+    """
     L2 = 2 * f
+    ids = jnp.arange(L2, dtype=jnp.int32)
+    live = (ids % f) < k  # arc j mirrors edge slot j mod f
     asrc = jnp.concatenate([u, v]).astype(jnp.int32)
     adst = jnp.concatenate([v, u]).astype(jnp.int32)
-    ids = jnp.arange(L2, dtype=jnp.int32)
+    src_key = jnp.where(live, asrc, n)
+    dst_key = jnp.where(live, adst, n)
     twin = (ids + f) % L2
 
-    # Group arcs by source: ONE stable sort + segment counts.
-    sorted_src, perm = sort_by_key(asrc)
+    # Group arcs by source: ONE stable sort + segment counts. Dead arcs
+    # all carry key n, occupying a trailing group real arcs never read.
+    sorted_src, perm = sort_by_key(src_key)
     inv = jnp.zeros((L2,), jnp.int32).at[perm].set(ids)
-    counts, offsets = grouped_offsets(sorted_src, n)
+    counts, offsets = grouped_offsets(sorted_src, n + 1)
 
     # succ(u->v) = the arc after twin (v->u) in v's circular adjacency.
     tpos = inv[twin]
-    grp_end = offsets[adst] + counts[adst]
-    nxt_pos = jnp.where(tpos + 1 < grp_end, tpos + 1, offsets[adst])
+    grp_end = offsets[dst_key] + counts[dst_key]
+    nxt_pos = jnp.where(tpos + 1 < grp_end, tpos + 1, offsets[dst_key])
     succ = perm[nxt_pos]
 
     # Linearize each circuit at its root's first arc. Any node of a
     # nonempty tree has arcs, so offsets[root] is in range for every
-    # arc's root; the clamp only guards unused (isolated-root) lanes.
+    # arc's root; the clamps only guard unused (isolated-root/dead)
+    # lanes.
     head_by_node = perm[jnp.minimum(offsets[root_of], L2 - 1)]
-    head_of_arc = head_by_node[asrc]
+    head_of_arc = head_by_node[jnp.minimum(src_key, n - 1)]
     succ = jnp.where(succ == head_of_arc, ids, succ)
+
+    # Dead edge slots collapse to inert self-loops, exactly like the
+    # capacity padding below.
+    succ = jnp.where(live, succ, ids)
+    twin = jnp.where(live, twin, ids)
+    head_of_arc = jnp.where(live, head_of_arc, ids)
+    asrc = jnp.where(live, asrc, 0)
+    adst = jnp.where(live, adst, 0)
 
     if pad > 0:
         pad_ids = jnp.arange(L2, L2 + pad, dtype=jnp.int32)
@@ -94,8 +119,8 @@ def _build_tour(u, v, root_of, *, n, f, pad):
         head_of_arc = jnp.concatenate([head_of_arc, pad_ids])
         asrc = jnp.concatenate([asrc, jnp.zeros((pad,), jnp.int32)])
         adst = jnp.concatenate([adst, jnp.zeros((pad,), jnp.int32)])
-    valid = jnp.arange(L2 + pad, dtype=jnp.int32) < L2
-    return succ, asrc, adst, twin, head_of_arc, valid
+        live = jnp.concatenate([live, jnp.zeros((pad,), jnp.bool_)])
+    return succ, asrc, adst, twin, head_of_arc, live
 
 
 def euler_tour(
@@ -106,6 +131,7 @@ def euler_tour(
     labels=None,
     root: int | None = None,
     pad_to: int | None = None,
+    num_edges: int | None = None,
 ) -> EulerTour:
     """Build the linearized Euler tour of a spanning forest.
 
@@ -117,27 +143,39 @@ def euler_tour(
     containing it. ``pad_to`` pads the arc arrays to a fixed capacity
     (inert self-loops) so many requests share one compiled shape --
     see ``tour_capacity``.
+
+    ``num_edges`` declares ``edge_u``/``edge_v`` to be a PADDED buffer
+    of which only the first ``num_edges`` slots are live: the compiled
+    tour program is then keyed by the buffer length, not the live
+    count, so a serving layer can run variable-size forests at one
+    fixed edge capacity (``repro.serve.graph``). The two mirror arcs of
+    a dead edge slot become inert self-loops, which means ``valid`` is
+    no longer a contiguous prefix -- consumers must mask by ``valid``
+    (as ``tree_computations`` and ``tour_splitters`` do), not slice by
+    ``num_arcs``.
     """
     n = num_nodes
     u = jnp.asarray(edge_u, jnp.int32).ravel()
     v = jnp.asarray(edge_v, jnp.int32).ravel()
-    f = int(u.shape[0])
-    L2 = 2 * f
-    cap = pad_to if pad_to is not None else L2
-    if cap < L2:
-        raise ValueError(f"pad_to={cap} below the {L2} arcs of the forest")
+    F = int(u.shape[0])
+    f = F if num_edges is None else int(num_edges)
+    if not 0 <= f <= F:
+        raise ValueError(f"num_edges={f} outside the edge buffer [0, {F}]")
+    cap = pad_to if pad_to is not None else 2 * F
+    if cap < 2 * F:
+        raise ValueError(f"pad_to={cap} below the {2 * F} arcs of the forest")
 
     if labels is None:
         from repro.core.components import shiloach_vishkin
 
-        labels, _ = shiloach_vishkin(u, v, n)
+        labels, _ = shiloach_vishkin(u[:f], v[:f], n)
     labels = jnp.asarray(labels, jnp.int32)
     if root is not None:
         root_of = jnp.where(labels == labels[root], jnp.int32(root), labels)
     else:
         root_of = labels
 
-    if f == 0:  # no edges: every node is its own (tour-less) tree
+    if f == 0:  # no live edges: every node is its own (tour-less) tree
         ids = jnp.arange(cap, dtype=jnp.int32)
         zeros = jnp.zeros((cap,), jnp.int32)
         return EulerTour(
@@ -147,10 +185,10 @@ def euler_tour(
         )
 
     succ, asrc, adst, twin, head_of_arc, valid = _build_tour(
-        u, v, root_of, n=n, f=f, pad=cap - L2
+        u, v, root_of, jnp.int32(f), n=n, f=F, pad=cap - 2 * F
     )
     return EulerTour(
         succ=succ, arc_src=asrc, arc_dst=adst, twin=twin,
         head_of_arc=head_of_arc, valid=valid,
-        num_arcs=L2, num_nodes=n, labels=labels, root_of=root_of,
+        num_arcs=2 * f, num_nodes=n, labels=labels, root_of=root_of,
     )

@@ -55,6 +55,73 @@ def test_engine_multiple_waves_and_eos():
     assert all(len(r.output) == 3 and r.done for r in done)
 
 
+def test_overlong_prompt_rejected_at_submit():
+    """A prompt that can never emit a token must be rejected loudly at
+    submit, not silently returned done=False after an exhausted wave
+    loop; the P == max_len boundary still serves (one token)."""
+    cfg, params, eng = _engine(num_slots=2, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(uid=0, prompt=list(range(1, 10)),
+                           max_new_tokens=4))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(uid=1, prompt=[], max_new_tokens=4))
+    assert eng.queue == []
+    eng.submit(Request(uid=2, prompt=list(range(1, 9)), max_new_tokens=4))
+    (r,) = eng.run()
+    assert r.done and len(r.output) == 1  # rows 0..7 prefill, row 7 predicts
+
+
+def test_overlong_prompt_truncate_mode():
+    """on_overflow='truncate' keeps the last max_len tokens, flags the
+    request, and decodes exactly like the pre-truncated prompt."""
+    cfg, params, eng = _engine(num_slots=2)
+    eng2 = ServeEngine(params, cfg, num_slots=2, max_len=8,
+                       on_overflow="truncate")
+    long_prompt = list(range(1, 14))
+    eng2.submit(Request(uid=0, prompt=list(long_prompt), max_new_tokens=1))
+    (r,) = eng2.run()
+    assert r.truncated and r.done and r.prompt == long_prompt[-8:]
+
+    ref = ServeEngine(params, cfg, num_slots=2, max_len=8)
+    ref.submit(Request(uid=1, prompt=long_prompt[-8:], max_new_tokens=1))
+    assert ref.run()[0].output == r.output
+    with pytest.raises(ValueError, match="on_overflow"):
+        ServeEngine(params, cfg, on_overflow="drop")
+
+
+def test_zero_and_one_token_budgets():
+    """max_new_tokens=0 finishes immediately with NO output (the old
+    loop emitted one token before checking); 1 still decodes one."""
+    cfg, params, eng = _engine(num_slots=2)
+    eng.submit(Request(uid=0, prompt=[3, 7], max_new_tokens=0))
+    eng.submit(Request(uid=1, prompt=[3, 7], max_new_tokens=1))
+    done = {r.uid: r for r in eng.run()}
+    assert done[0].done and done[0].output == []
+    assert done[1].done and len(done[1].output) == 1
+    assert eng.waves == 1  # the zero-budget request burned no wave slot
+
+    # the 1-token result equals standalone greedy's first step
+    logits = forward(params, cfg, jnp.asarray([[3, 7]], jnp.int32))
+    assert done[1].output == [int(jnp.argmax(logits[0, -1]))]
+
+
+def test_cache_fills_to_exactly_max_len():
+    """The last KV row is usable: a request can decode until the cache
+    holds exactly max_len tokens (max_len - P + 1 outputs), and those
+    tokens match a roomier engine's prefix bit-for-bit."""
+    M, P = 8, 3
+    cfg, params, eng = _engine(num_slots=2, max_len=M)
+    prompt = [2, 9, 4]
+    eng.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=64))
+    (r,) = eng.run()
+    assert r.done and len(r.output) == M - P + 1  # was M - P - 1 pre-fix
+
+    big = ServeEngine(params, cfg, num_slots=2, max_len=4 * M)
+    big.submit(Request(uid=1, prompt=list(prompt),
+                       max_new_tokens=M - P + 1))
+    assert big.run()[0].output == r.output
+
+
 @pytest.mark.parametrize("which", ["gcn", "sage", "pna"])
 def test_extra_archs_smoke(which):
     from repro.models.gnn import extra

@@ -185,6 +185,48 @@ def test_multi_tree_forest_and_padding():
         euler_tour(u, v, n, pad_to=2 * len(u) - 2)
 
 
+def test_padded_edge_buffer_tour_matches():
+    """num_edges= (padded forest-edge buffer, the serve-path compile
+    convention) is bit-neutral: the tour skips dead slots and every
+    computation matches both the unpadded tour and the serial oracle,
+    on both rank engines."""
+    from repro.core.components import shiloach_vishkin
+
+    F = 64
+    for n, trees, seed in [(40, 5, 0), (60, 3, 1), (7, 7, 2), (30, 1, 3)]:
+        edges = random_tree_forest(n, trees, seed=seed)
+        u, v = edges[:, 0], edges[:, 1]
+        ref = serial_tree_reference(u, v, n)
+        up = np.zeros(F, np.int32)
+        vp = np.zeros(F, np.int32)
+        up[:len(u)], vp[:len(v)] = u, v
+        labels, _ = shiloach_vishkin(u, v, n)
+        tour = euler_tour(up, vp, n, labels=labels, num_edges=len(u))
+        assert tour.num_arcs == 2 * len(u) and tour.capacity == 2 * F
+        assert int(np.asarray(tour.valid).sum()) == tour.num_arcs
+        for eng in ("wylie", "splitter"):
+            comp = tree_computations(tour, rank_engine=eng)
+            for k in FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(comp, k)), ref[k],
+                    err_msg=f"{k} ({eng}, n={n})",
+                )
+        # pad_edges_to through the one-shot pipeline: identical to the
+        # unpadded pipeline, field for field
+        base = tree_analytics(u, v, n, engine="dense")
+        padded = tree_analytics(u, v, n, engine="dense", pad_edges_to=F)
+        for k in FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(padded.computations, k)),
+                np.asarray(getattr(base.computations, k)), err_msg=k,
+            )
+    with pytest.raises(ValueError, match="num_edges"):
+        euler_tour(np.zeros(4, np.int32), np.zeros(4, np.int32), 5,
+                   num_edges=5)
+    with pytest.raises(ValueError, match="pad_edges_to"):
+        tree_analytics(u, v, n, engine="dense", pad_edges_to=1)
+
+
 def test_rerooted_single_tree():
     edges = random_tree(90, seed=8)
     _assert_matches_reference(edges[:, 0], edges[:, 1], 90, root=41)

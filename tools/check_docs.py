@@ -58,6 +58,8 @@ def code_choices() -> dict[str, tuple[str, ...]]:
     from repro.core.components import HOOK_IMPLS
     from repro.core.list_ranking import KERNEL_IMPLS, PACK_MODES
     from repro.distributed.graph import EXCHANGES
+    from repro.serve.engine import OVERFLOW_POLICIES
+    from repro.serve.graph import KINDS
     from repro.trees import RANK_ENGINES
 
     return {
@@ -67,6 +69,8 @@ def code_choices() -> dict[str, tuple[str, ...]]:
         "exchange": tuple(EXCHANGES),
         "rank_engine": tuple(RANK_ENGINES),
         "pack_mode": tuple(PACK_MODES),
+        "kind": tuple(KINDS),
+        "on_overflow": tuple(OVERFLOW_POLICIES),
     }
 
 

@@ -14,7 +14,10 @@ pinned CI environment). Three API families drifted between those:
   that drifts gets its shim added HERE, never inline at a call site.
 
 Every mesh and every shard_map in the repo routes through this module so
-the same code runs on jax 0.4.x through current.
+the same code runs on jax 0.4.x through current. ``Mesh`` is re-exported
+from here for the same reason: call sites write ``from repro.compat
+import Mesh`` so this stays the one direct ``jax.sharding`` import site
+(enforced by the compat-shim lint pass, docs/lint.md).
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 import jax
-from jax.sharding import Mesh
+from jax.sharding import Mesh  # noqa: F401  (re-exported, see docstring)
 
 # --------------------------------------------------------------------------
 # AxisType (explicit-sharding flags, jax >= 0.5)

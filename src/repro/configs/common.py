@@ -7,7 +7,9 @@ from typing import Any, Callable
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import Mesh
 
 
 @dataclass

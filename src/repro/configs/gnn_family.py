@@ -23,8 +23,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import Mesh
 from repro.configs.common import DryRunSpec, dp_axes, flat_axes, named, pad_to, sds
 from repro.launch import perfmodel as pm
 from repro.launch.mesh import mesh_num_chips

@@ -23,8 +23,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import Mesh
 from repro.configs.common import (
     DryRunSpec,
     dp_axes,

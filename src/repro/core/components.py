@@ -124,7 +124,9 @@ def _hook_phase_fns(a: Array, b: Array, n: int, hook_impl: str):
         cond2 = jnp.logical_and(stagnant_a, Db < Da)
         tgt2 = jnp.where(cond2, Da, n)
         D2 = D1.at[tgt2].min(jnp.where(cond2, Db, n), mode="drop")
-        Q2 = Q.at[jnp.where(cond2, Db, n)].set(s, mode="drop")
+        # Every winning lane writes the SAME scalar stamp s: duplicate
+        # targets commute, so plain set is deterministic here.
+        Q2 = Q.at[jnp.where(cond2, Db, n)].set(s, mode="drop")  # repro-lint: disable=scatter-determinism
         return D2, Q2
 
     def sv3(D2, Q, s):
@@ -231,7 +233,7 @@ def sv_round_fns(
         # SV1b: mark roots whose tree shrank. (Concurrent writes of the same
         # value s -> plain scatter-set with OOB drop for unmarked lanes.)
         mark = D1 != D
-        Q = Q.at[jnp.where(mark, D1, n)].set(s, mode="drop")
+        Q = Q.at[jnp.where(mark, D1, n)].set(s, mode="drop")  # repro-lint: disable=scatter-determinism
         q_base = Q  # replicated: the shrink marks are device-independent
 
         D2, Q = sv2_hook(D1, D, Q, s)

@@ -234,13 +234,16 @@ def frontier_shiloach_vishkin(
             )
             stats.edges_touched += 2 * n  # SV2 + SV3 over the n sampled edges
         if with_stats:  # O(n) scatter + host sync: only when asked for
+            # repro-lint: disable=host-sync  (opt-in stats readback)
             stats.largest_component_frac = float(
                 _largest_component_frac(D, n=n)
             )
         # Compact straight away: drops ALL edges internal to the giant
         # (and to every other component the pre-pass already resolved).
         live_mask = D[a] != D[b]
-        live = int(jnp.sum(live_mask.astype(jnp.int32)))
+        # The level-synchronous sync (paper sec. 4): the host must see the
+        # live count to pick the next power-of-two bucket.
+        live = int(jnp.sum(live_mask.astype(jnp.int32)))  # repro-lint: disable=host-sync
         stats.live_after_sample = live
         stats.edges_touched += m2  # full-list live scan (pre-pass rounds
         # walked only the sampled edges, so this mask needs its own pass)
@@ -264,12 +267,16 @@ def frontier_shiloach_vishkin(
         # SV2 + SV3 passes; the Pallas hook kernel doesn't export its
         # compare mask, so that path pays a third (mask) pass per round.
         passes = 2 if hook_impl == "xla" else 3
-        stats.edges_touched += passes * int(rounds) * m2_level
-        stats.levels.append((m2_level, int(rounds)))
-        if not bool(changed) or int(s) > bound:
+        # Per-level host syncs, not per-round: _run_level keeps the inner
+        # SV iteration on device (lax.while_loop) and the host reads one
+        # round count / convergence flag / live count per LEVEL to drive
+        # the shrink ladder -- the paper's level-synchronous design.
+        stats.edges_touched += passes * int(rounds) * m2_level  # repro-lint: disable=host-sync
+        stats.levels.append((m2_level, int(rounds)))  # repro-lint: disable=host-sync
+        if not bool(changed) or int(s) > bound:  # repro-lint: disable=host-sync
             break
         # Shrink: the masked frontier fits the next power-of-two bucket.
-        live = int(jnp.sum(fmask.astype(jnp.int32)))
+        live = int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
         new_size = max(min_bucket, next_pow2(live))
         if new_size >= m2_level:  # can't shrink further: run to convergence
             force_converge = True
@@ -282,7 +289,8 @@ def frontier_shiloach_vishkin(
         m2_level = new_size
 
     D = sv_compress(D, n)
-    rounds_total = int(s) - 1
+    # Terminal readback: the loop above already synced on s every level.
+    rounds_total = int(s) - 1  # repro-lint: disable=host-sync
     stats.rounds = rounds_total
     out = (D, jnp.int32(rounds_total))
     if record_hooks:

@@ -37,6 +37,8 @@ from repro.ops.kiss import KissRng
 Array = jax.Array
 
 PACK_MODES = ("aos", "soa", "word64")
+# wylie_rank's subset: pointer jumping has no word64-packed variant.
+WYLIE_PACK_MODES = ("aos", "soa")
 KERNEL_IMPLS = ("auto", "xla", "pallas", "pallas_interpret")
 
 
@@ -62,7 +64,7 @@ def wylie_rank(
     lane = jnp.arange(n, dtype=succ.dtype)
     rank0 = (succ != lane).astype(jnp.int32)
 
-    check_choice("pack_mode", pack_mode, ("aos", "soa"))
+    check_choice("pack_mode", pack_mode, WYLIE_PACK_MODES)
     if pack_mode == "soa":
 
         def body(_, st):
@@ -332,10 +334,11 @@ def random_splitter_rank(
     )
     if not with_stats:
         return rank
+    # Opt-in stats materialization after the walk finished.
     stats = SplitterStats(
-        splitters=np.asarray(splitters),
-        sublist_lengths=np.asarray(sublens),
-        walk_steps=int(steps),
+        splitters=np.asarray(splitters),  # repro-lint: disable=host-sync
+        sublist_lengths=np.asarray(sublens),  # repro-lint: disable=host-sync
+        walk_steps=int(steps),  # repro-lint: disable=host-sync
         expected_mean=n / len(splitters),
     )
     return rank, stats

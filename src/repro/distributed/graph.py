@@ -57,9 +57,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.compat import Mesh
 from repro.core.components import (
     HOOK_IMPLS,
     _maybe_dedup,
@@ -339,10 +340,12 @@ def sharded_shiloach_vishkin(
         out = (labels, rounds)
     if not with_stats:
         return out
-    r = int(rounds)
+    # Opt-in stats materialization: with_stats=True is an explicit ask to
+    # read the per-round traces back to host, after the loop converged.
+    r = int(rounds)  # repro-lint: disable=host-sync
     stats = CCExchangeStats(
-        words_per_round=np.asarray(words)[1 : r + 1],
-        frontier_per_round=np.asarray(frontier)[1 : r + 1],
+        words_per_round=np.asarray(words)[1 : r + 1],  # repro-lint: disable=host-sync
+        frontier_per_round=np.asarray(frontier)[1 : r + 1],  # repro-lint: disable=host-sync
         exchange=exchange,
         capacity=capacity if exchange == "sparse" else None,
     )
@@ -595,13 +598,17 @@ def sharded_frontier_shiloach_vishkin(
         # SV2 + SV3 passes over the local bucket (the Pallas hook kernel
         # pays a third, mask, pass), plus the compaction write below.
         passes = 2 if hook_impl == "xla" else 3
-        stats.edges_touched += passes * int(rounds) * bucket
-        stats.levels.append((bucket, int(rounds)))
-        if not bool(changed) or int(s) > bound:
+        # Per-level host syncs (not per-round): the inner SV iteration
+        # stays on device and the host reads one round count /
+        # convergence flag / live max per LEVEL to drive the shared
+        # shrink ladder -- same level-synchronous design as frontier.py.
+        stats.edges_touched += passes * int(rounds) * bucket  # repro-lint: disable=host-sync
+        stats.levels.append((bucket, int(rounds)))  # repro-lint: disable=host-sync
+        if not bool(changed) or int(s) > bound:  # repro-lint: disable=host-sync
             break
         # Shrink: every shard drops to the power-of-two bucket covering
         # the LARGEST per-device live count (one shared compiled shape).
-        new_bucket = max(min_bucket, next_pow2(int(live_max)))
+        new_bucket = max(min_bucket, next_pow2(int(live_max)))  # repro-lint: disable=host-sync
         if new_bucket >= bucket:  # can't shrink further: run to convergence
             force_converge = True
             continue
@@ -612,7 +619,8 @@ def sharded_frontier_shiloach_vishkin(
         bucket = new_bucket
 
     D = sv_compress(D, n)
-    rounds_total = int(s) - 1
+    # Terminal readback: the loop above already synced on s every level.
+    rounds_total = int(s) - 1  # repro-lint: disable=host-sync
     stats.rounds = rounds_total
     out = (D, jnp.int32(rounds_total))
     if record_hooks:
@@ -622,9 +630,10 @@ def sharded_frontier_shiloach_vishkin(
         exa = aux
     if not with_stats:
         return out
+    # Opt-in stats materialization after convergence (with_stats=True).
     words, frontier = exa
-    stats.words_per_round = np.asarray(words)[1 : rounds_total + 1]
-    stats.frontier_per_round = np.asarray(frontier)[1 : rounds_total + 1]
+    stats.words_per_round = np.asarray(words)[1 : rounds_total + 1]  # repro-lint: disable=host-sync
+    stats.frontier_per_round = np.asarray(frontier)[1 : rounds_total + 1]  # repro-lint: disable=host-sync
     return out + (stats,)
 
 
@@ -800,10 +809,11 @@ def sharded_random_splitter_rank(
     rank = rank_pad[:n]
     if not with_stats:
         return rank
+    # Opt-in stats materialization after the walk finished.
     stats = SplitterStats(
-        splitters=np.asarray(splitters),
-        sublist_lengths=np.asarray(sublens),
-        walk_steps=int(steps),
+        splitters=np.asarray(splitters),  # repro-lint: disable=host-sync
+        sublist_lengths=np.asarray(sublens),  # repro-lint: disable=host-sync
+        walk_steps=int(steps),  # repro-lint: disable=host-sync
         expected_mean=n / p,
     )
     return rank, stats

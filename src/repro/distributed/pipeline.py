@@ -18,9 +18,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import Mesh, shard_map
 
 Array = jax.Array
 

@@ -12,7 +12,9 @@ import re
 from dataclasses import dataclass, field, replace
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import Mesh
 
 
 @dataclass(frozen=True)

@@ -51,6 +51,8 @@ def _edge_hook_kernel(
         lab_out_ref[...] = lab_out_ref[...].at[tgt].min(
             jnp.where(cond, Db, n), mode="drop"
         )
+        # Same-value stamp s from every winner: duplicates commute.
+        # repro-lint: disable=scatter-determinism
         q_out_ref[...] = q_out_ref[...].at[jnp.where(cond, Db, n)].set(
             s, mode="drop"
         )

@@ -22,7 +22,8 @@ def edge_hook_ref(
         cond = jnp.logical_and(stagnant_a, Db < Da)
         tgt = jnp.where(cond, Da, n)
         out = labels.at[tgt].min(jnp.where(cond, Db, n), mode="drop")
-        q = stamps.at[jnp.where(cond, Db, n)].set(s, mode="drop")
+        # Same-value stamp s from every winner: duplicates commute.
+        q = stamps.at[jnp.where(cond, Db, n)].set(s, mode="drop")  # repro-lint: disable=scatter-determinism
         return out, q
     if mode == "sv3":
         root_a = labels[Da] == Da

@@ -11,9 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import Mesh
 
-from repro.compat import make_mesh
+from repro.compat import Mesh, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

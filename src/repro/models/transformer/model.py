@@ -13,8 +13,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
-
+from repro.compat import Mesh
 from repro.distributed.sharding import ShardingRules, constrain, spec_for
 from repro.ops.sharded_lookup import sharded_row_gather
 from repro.models.common import (

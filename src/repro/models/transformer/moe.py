@@ -29,9 +29,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import Mesh, shard_map
 from repro.ops.sorted_dispatch import sort_by_key
 
 Array = jax.Array

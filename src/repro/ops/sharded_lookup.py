@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import Mesh, shard_map
 
 Array = jax.Array
 

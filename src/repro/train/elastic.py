@@ -11,7 +11,9 @@ from __future__ import annotations
 import logging
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import Mesh
 
 log = logging.getLogger("repro.elastic")
 

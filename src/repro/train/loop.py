@@ -152,10 +152,13 @@ def train(
             params, opt_state, metrics = jitted(params, opt_state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
+        # The block above already paid the sync (the watchdog times full
+        # steps); reading the scalar afterwards is free.
+        loss = float(metrics["loss"])  # repro-lint: disable=host-sync
         watchdog.observe(step, dt)
         if step % loop_cfg.log_every == 0:
-            log.info("step %d loss %.4f (%.3fs)", step, float(metrics["loss"]), dt)
-        history.append({"step": step, "loss": float(metrics["loss"]), "dt": dt})
+            log.info("step %d loss %.4f (%.3fs)", step, loss, dt)
+        history.append({"step": step, "loss": loss, "dt": dt})
         if mgr and (step + 1) % loop_cfg.checkpoint_every == 0:
             mgr.save(step + 1, {"params": params, "opt_state": opt_state})
     if mgr:

@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.components import check_choice
 from repro.core.list_ranking import (
     KERNEL_IMPLS,
+    WYLIE_PACK_MODES,
     max_splitters_for_linear_work,
     random_splitter_rank,
     select_splitters,
@@ -100,7 +101,7 @@ def tour_ranks(
     """
     check_choice("rank_engine", rank_engine, RANK_ENGINES)
     check_choice("kernel_impl", kernel_impl, KERNEL_IMPLS)
-    check_choice("pack_mode", pack_mode, ("aos", "soa"))
+    check_choice("pack_mode", pack_mode, WYLIE_PACK_MODES)
     multi = mesh is not None or jax.device_count() > 1
     if rank_engine == "auto":
         rank_engine = "splitter" if multi else "wylie"

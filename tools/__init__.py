@@ -1,0 +1,1 @@
+"""Repo tooling: ``tools.lint`` (repro-lint) and its thin wrappers."""

@@ -1,104 +1,58 @@
-"""Docs-consistency check: the choice matrix in docs/engines.md must
-equal the ``check_choice`` sets in the code, value for value and in the
-same order, so the documented matrix cannot rot.
+"""DEPRECATED shim: the docs-consistency check moved into repro-lint.
 
-Parses the first (``choice-matrix``) table in docs/engines.md -- one
-row per knob, knob name as ```name=`` in the first cell, valid values
-as backticked tokens in the second cell -- and compares each row
-against the authoritative tuple in the code. Exits non-zero listing
-every mismatch. Run from the repo root:
+The choice-matrix comparison now lives in the ``choice-set`` lint pass
+(``tools/lint/passes/choice_set.py``, docs/lint.md) and runs with the
+rest of the invariant checks:
+
+    python -m tools.lint src tests benchmarks
+
+This wrapper keeps the old CLI contract -- same exit codes, same
+problem strings -- so existing CI invocations and tests keep working:
 
     PYTHONPATH=src python tools/check_docs.py
 
-CI runs this in both jax lanes; ``tests/test_docs.py`` wraps it so the
-tier-1 suite catches drift locally too.
+Unlike the original it is fully static (AST-parses the choice-set
+constants instead of importing repro), so it no longer needs
+PYTHONPATH=src or a jax import to run.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-DOCS = Path(__file__).resolve().parent.parent / "docs" / "engines.md"
+_ROOT = Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:  # imported as top-level `check_docs`
+    sys.path.insert(0, str(_ROOT))
 
-_ROW = re.compile(r"^\|\s*`(?P<knob>\w+)=`\s*\|(?P<values>[^|]*)\|")
-_TOKEN = re.compile(r"`([^`]+)`")
+from tools.lint.passes import choice_set as _cs
+
+DOCS = _ROOT / "docs" / "engines.md"
 
 
 def documented_choices(text: str) -> dict[str, tuple[str, ...]]:
-    """{knob: ordered value tuple} from the choice-matrix table rows.
-
-    Only the table following the ``<!-- choice-matrix`` marker counts
-    (docs/engines.md has other tables -- numeric knobs, guarantees --
-    whose rows are not choice sets); parsing stops at the next
-    heading."""
-    out = {}
-    in_matrix = False
-    for line in text.splitlines():
-        if "<!-- choice-matrix" in line:
-            in_matrix = True
-            continue
-        if in_matrix and line.startswith("#"):
-            break
-        if not in_matrix:
-            continue
-        m = _ROW.match(line.strip())
-        if not m or m.group("knob") in out:
-            continue
-        values = tuple(_TOKEN.findall(m.group("values")))
-        if values:
-            out[m.group("knob")] = values
-    return out
+    """{knob: ordered value tuple} from the choice-matrix table rows."""
+    return _cs.documented_choices(text)
 
 
 def code_choices() -> dict[str, tuple[str, ...]]:
-    """The authoritative dispatch sets, straight from the code."""
-    from repro.core import __init__ as _  # noqa: F401  (package import)
-    import repro.core as core
-    from repro.core.components import HOOK_IMPLS
-    from repro.core.list_ranking import KERNEL_IMPLS, PACK_MODES
-    from repro.distributed.graph import EXCHANGES
-    from repro.serve.engine import OVERFLOW_POLICIES
-    from repro.serve.graph import KINDS
-    from repro.trees import RANK_ENGINES
-
-    return {
-        "engine": tuple(core._CC_ENGINES),
-        "kernel_impl": tuple(KERNEL_IMPLS),
-        "hook_impl": tuple(HOOK_IMPLS),
-        "exchange": tuple(EXCHANGES),
-        "rank_engine": tuple(RANK_ENGINES),
-        "pack_mode": tuple(PACK_MODES),
-        "kind": tuple(KINDS),
-        "on_overflow": tuple(OVERFLOW_POLICIES),
-    }
+    """The authoritative dispatch sets (statically parsed from the
+    files registered in the choice-set pass KNOBS)."""
+    return _cs.code_choices(_ROOT)
 
 
 def check() -> list[str]:
     """Returns a list of human-readable problems (empty = consistent)."""
     doc = documented_choices(DOCS.read_text())
     code = code_choices()
-    problems = []
-    for knob, want in sorted(code.items()):
-        got = doc.get(knob)
-        if got is None:
-            problems.append(
-                f"{knob}=: no choice-matrix row in docs/engines.md "
-                f"(code has {want})"
-            )
-        elif got != want:
-            problems.append(
-                f"{knob}=: docs/engines.md says {got}, code says {want}"
-            )
-    for knob in sorted(set(doc) - set(code)):
-        problems.append(
-            f"{knob}=: documented in docs/engines.md but unknown to "
-            "tools/check_docs.py -- add it to code_choices()"
-        )
-    return problems
+    return [problem for _knob, problem in _cs.compare(doc, code)]
 
 
 def main() -> int:
+    print(
+        "note: tools/check_docs.py is a shim over the choice-set lint "
+        "pass; prefer `python -m tools.lint` (docs/lint.md)",
+        file=sys.stderr,
+    )
     problems = check()
     for p in problems:
         print(f"DOCS INCONSISTENT: {p}", file=sys.stderr)

@@ -1,0 +1,25 @@
+"""repro-lint: AST-based invariant checks for the PRAM->accelerator
+guidelines (docs/guidelines.md G1-G5) and the repo's hard conventions
+(compat-shim routing, deterministic min-CRCW scatters, choice-set /
+docs sync, power-of-two capacity bucketing).
+
+Run from the repo root::
+
+    python -m tools.lint src/ tests/ benchmarks/
+
+The framework is pure-static (stdlib ``ast`` + ``tokenize``; no jax
+import), so the whole tree lints in well under a second. See
+``docs/lint.md`` for the pass catalog, the pragma / baseline workflow,
+and how to add a pass.
+"""
+from tools.lint.core import (  # noqa: F401
+    Finding,
+    LintPass,
+    Module,
+    Project,
+    lint_source,
+    load_baseline,
+    run_lint,
+    split_baselined,
+)
+from tools.lint.passes import ALL_PASSES  # noqa: F401

@@ -1,0 +1,116 @@
+"""CLI: ``python -m tools.lint src/ tests/ benchmarks/``.
+
+Exit status: 0 clean (or everything baselined/pragma'd), 1 on new
+findings or stale baseline entries, 2 on usage errors. ``--json``
+emits the machine-readable finding list (CI runs this).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from tools.lint.core import (
+    load_baseline,
+    run_lint,
+    save_baseline,
+    split_baselined,
+)
+from tools.lint.passes import ALL_PASSES
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = REPO_ROOT / "tools" / "lint" / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description=(
+            "repro-lint: AST invariant checks for the PRAM->accelerator "
+            "guidelines (docs/lint.md)"
+        ),
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src", "tests", "benchmarks"],
+        help="files/directories to lint (default: src tests benchmarks)",
+    )
+    ap.add_argument("--json", action="store_true", help="JSON findings")
+    ap.add_argument(
+        "--baseline", default=str(DEFAULT_BASELINE),
+        help="baseline file (default: tools/lint/baseline.json)",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="report grandfathered findings too",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to the baseline file and exit 0",
+    )
+    ap.add_argument(
+        "--select", default=None,
+        help="comma-separated pass names to run (default: all)",
+    )
+    ap.add_argument(
+        "--list-passes", action="store_true", help="list passes and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in ALL_PASSES:
+            print(f"{p.code}  {p.name:22s} [{p.guideline}] {p.description}")
+        return 0
+
+    select = (
+        {s.strip() for s in args.select.split(",") if s.strip()}
+        if args.select
+        else None
+    )
+    if select:
+        known = {p.name for p in ALL_PASSES}
+        bad = select - known
+        if bad:
+            print(
+                f"unknown pass(es): {sorted(bad)}; known: {sorted(known)}",
+                file=sys.stderr,
+            )
+            return 2
+
+    t0 = time.monotonic()
+    findings = run_lint(args.paths, root=REPO_ROOT, select=select)
+
+    if args.write_baseline:
+        save_baseline(args.baseline, findings)
+        print(
+            f"wrote {len(findings)} finding(s) to {args.baseline}",
+            file=sys.stderr,
+        )
+        return 0
+
+    baseline = [] if args.no_baseline else load_baseline(args.baseline)
+    new, old, stale = split_baselined(findings, baseline)
+
+    if args.json:
+        print(json.dumps([f.to_json() for f in new], indent=2))
+    else:
+        for f in new:
+            print(f.format())
+    for e in stale:
+        print(
+            "stale baseline entry (fixed? remove it): "
+            f"{e.get('file')} [{e.get('pass')}] {e.get('snippet', '')!r}",
+            file=sys.stderr,
+        )
+    dt = time.monotonic() - t0
+    summary = (
+        f"repro-lint: {len(new)} new finding(s), {len(old)} baselined, "
+        f"{len(stale)} stale baseline entr(y/ies) in {dt:.2f}s"
+    )
+    print(summary, file=sys.stderr)
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,252 @@
+"""Shared AST helpers for the repro-lint passes.
+
+Everything here is heuristic in the way linters are: the analyses are
+single-pass and name-based (no import resolution, no fixpoint), which
+is exactly enough for this repo's straight-line driver loops and
+round-body closures, and cheap enough to keep the whole tree under a
+second. Passes document their scope rules in docs/lint.md.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+# Attribute reads on a device array that are static Python values, not
+# device->host transfers (shapes are compile-time in jax).
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding"})
+
+# jax.* calls that return plain host values (device discovery etc.),
+# not traced arrays.
+HOST_JAX_CALLS = frozenset(
+    {
+        "jax.devices",
+        "jax.device_count",
+        "jax.local_device_count",
+        "jax.local_devices",
+        "jax.default_backend",
+        "jax.tree_util.tree_structure",
+    }
+)
+
+DEVICE_PREFIXES = ("jnp.", "jax.", "lax.")
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """'jax.lax.while_loop' for nested Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def _const_str_tuple(node: ast.AST) -> tuple[str, ...] | None:
+    """The value of a literal tuple/list of strings, else None."""
+    if isinstance(node, (ast.Tuple, ast.List)) and all(
+        isinstance(e, ast.Constant) and isinstance(e.value, str)
+        for e in node.elts
+    ):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+def module_constants(tree: ast.Module) -> dict[str, tuple[tuple[str, ...], int]]:
+    """{NAME: (string tuple, lineno)} for module-level literal tuples."""
+    out: dict[str, tuple[tuple[str, ...], int]] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name):
+                val = _const_str_tuple(stmt.value)
+                if val is not None:
+                    out[tgt.id] = (val, stmt.lineno)
+    return out
+
+
+def _jit_marker(node: ast.AST) -> tuple[bool, tuple[str, ...]]:
+    """Is ``node`` (a decorator or call) a jax.jit wrapper? Returns
+    (is_jit, static_argnames)."""
+    name = dotted_name(node)
+    if name in ("jit", "jax.jit"):
+        return True, ()
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        inner_is_jit = False
+        statics: tuple[str, ...] = ()
+        if fname in ("jit", "jax.jit"):
+            inner_is_jit = True
+        elif fname in ("partial", "functools.partial") and node.args:
+            inner_is_jit, statics = _jit_marker(node.args[0])
+        if inner_is_jit:
+            for kw in node.keywords:
+                if kw.arg == "static_argnames":
+                    vals = _const_str_tuple(kw.value)
+                    if vals is None and isinstance(kw.value, ast.Constant):
+                        vals = (kw.value.value,)
+                    statics = statics + tuple(vals or ())
+            return True, statics
+    return False, ()
+
+
+@dataclass
+class FuncInfo:
+    """One function (or nested closure) with its lint-relevant context."""
+
+    node: ast.FunctionDef
+    parents: list  # enclosing FunctionDef chain, outermost first
+    is_jitted: bool = False
+    static_argnames: tuple = ()
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def qualnames(self) -> list[str]:
+        return [p.name for p in self.parents] + [self.node.name]
+
+
+def iter_functions(tree: ast.Module):
+    """Yield FuncInfo for every (async) function, with parent chains."""
+
+    def walk(node, parents):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                is_jit, statics = False, ()
+                for dec in child.decorator_list:
+                    j, s = _jit_marker(dec)
+                    if j:
+                        is_jit, statics = True, s
+                yield FuncInfo(child, list(parents), is_jit, statics)
+                yield from walk(child, parents + [child])
+            else:
+                yield from walk(child, parents)
+
+    yield from walk(tree, [])
+
+
+def module_jitted(tree: ast.Module) -> dict[str, tuple[str, ...]]:
+    """{name: static_argnames} for jit-wrapped callables in this module:
+    decorated defs plus ``name = jax.jit(fn, ...)`` assignments."""
+    out: dict[str, tuple[str, ...]] = {}
+    for info in iter_functions(tree):
+        if info.is_jitted:
+            out[info.name] = info.static_argnames
+    for stmt in ast.walk(tree):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name) and isinstance(stmt.value, ast.Call):
+                is_jit, statics = _jit_marker(stmt.value)
+                if is_jit:
+                    out[tgt.id] = statics
+    return out
+
+
+@dataclass
+class Taint:
+    """Names holding device values (or host ints derived from them)."""
+
+    names: set = field(default_factory=set)
+
+    def has(self, name: str) -> bool:
+        return name in self.names
+
+
+def _assign_targets(tgt: ast.AST):
+    if isinstance(tgt, ast.Name):
+        yield tgt.id
+    elif isinstance(tgt, (ast.Tuple, ast.List)):
+        for e in tgt.elts:
+            yield from _assign_targets(e)
+
+
+def expr_is_device(
+    expr: ast.AST,
+    tainted: set,
+    jitted: dict,
+    skip_calls: frozenset = frozenset(),
+) -> bool:
+    """Does ``expr`` carry a device value?
+
+    True when it mentions a jnp./jax./lax. call (minus the host-value
+    allowlist), a call to a module-jitted function, or a tainted name --
+    except under a ``.shape``-style static attribute or inside a call
+    from ``skip_calls`` (the recompile-hazard sanitizers)."""
+
+    def visit(node) -> bool:
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return False  # a.shape / a.ndim reads are static
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name is not None:
+                base = name.split(".")[-1]
+                if base in skip_calls or name in skip_calls:
+                    return False  # sanitized (next_pow2 & friends)
+                if name in jitted or base in jitted:
+                    return True
+                if (
+                    name.startswith(DEVICE_PREFIXES)
+                    and name not in HOST_JAX_CALLS
+                ):
+                    return True
+            return any(visit(c) for c in ast.iter_child_nodes(node))
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        return any(visit(c) for c in ast.iter_child_nodes(node))
+
+    return visit(expr)
+
+
+def function_taint(
+    fn: ast.FunctionDef,
+    jitted: dict,
+    *,
+    seed_calls: tuple[str, ...] = (),
+    skip_calls: frozenset = frozenset(),
+) -> set:
+    """One forward pass over ``fn``'s statements collecting names bound
+    to device values. ``seed_calls`` optionally restricts taint SOURCES
+    to specific builtins (the recompile pass seeds from int()/float()/
+    .item() results instead of raw device values)."""
+    tainted: set = set()
+
+    def source(expr) -> bool:
+        if not seed_calls:
+            return expr_is_device(expr, tainted, jitted, skip_calls)
+
+        def visit(node) -> bool:
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                base = name.split(".")[-1] if name else None
+                if base in skip_calls or (name or "") in skip_calls:
+                    return False
+                if name in seed_calls and node.args:
+                    if expr_is_device(node.args[0], tainted, jitted):
+                        return True
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                ):
+                    return True
+            if isinstance(node, ast.Name):
+                return node.id in tainted
+            return any(visit(c) for c in ast.iter_child_nodes(node))
+
+        return visit(expr)
+
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign):
+            if source(stmt.value):
+                for t in stmt.targets:
+                    tainted.update(_assign_targets(t))
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None and source(stmt.value):
+                tainted.update(_assign_targets(stmt.target))
+    return tainted

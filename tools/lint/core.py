@@ -1,0 +1,353 @@
+"""repro-lint framework: file walking, per-file pass dispatch, pragma
+suppression, baseline matching, and human/JSON reporting.
+
+Key objects:
+
+* ``Module`` -- one parsed source file (AST + pragma map).
+* ``LintPass`` -- a check; per-module via ``check_module`` and/or
+  repo-wide via ``finalize``. Each pass declares which files it applies
+  to (``applies_to``), so dispatch is per file.
+* ``Project`` -- the parsed module set rooted at the repo root.
+* ``run_lint`` / ``lint_source`` -- entry points (CLI and tests).
+
+Suppression layers, innermost first:
+
+1. ``# repro-lint: disable=<pass>[,<pass>...]`` -- trailing on the
+   offending line, or on a standalone comment line directly above it
+   (``disable=all`` kills every pass for that line).
+2. ``# repro-lint: disable-file=<pass>`` anywhere -- whole file.
+3. The committed baseline (``tools/lint/baseline.json``) -- grandfathers
+   existing findings by (file, pass, source-line text), so line-number
+   drift does not invalidate entries. New findings never match.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+
+PRAGMA_RE = re.compile(
+    r"#\s*repro-lint:\s*(?P<kind>disable(?:-file)?)\s*=\s*"
+    r"(?P<passes>[\w, -]+)"
+)
+
+SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".pytest_cache"}
+
+
+@dataclass
+class Finding:
+    """One lint finding, anchored at a repo-relative file:line."""
+
+    file: str  # repo-relative posix path
+    line: int
+    col: int
+    pass_name: str
+    code: str
+    message: str
+    guideline: str = ""
+    snippet: str = ""  # stripped source line (baseline key component)
+
+    def key(self) -> tuple[str, str, str]:
+        return (self.file, self.pass_name, self.snippet)
+
+    def format(self) -> str:
+        g = f" [{self.guideline}]" if self.guideline else ""
+        return (
+            f"{self.file}:{self.line}:{self.col}: {self.code}"
+            f"({self.pass_name}){g} {self.message}"
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "file": self.file,
+            "line": self.line,
+            "col": self.col,
+            "code": self.code,
+            "pass": self.pass_name,
+            "guideline": self.guideline,
+            "message": self.message,
+            "snippet": self.snippet,
+        }
+
+
+@dataclass
+class Module:
+    """One parsed python file plus its pragma map."""
+
+    path: Path
+    rel: str  # repo-relative posix path
+    text: str
+    tree: ast.Module
+    lines: list[str]
+    # physical line -> set of disabled pass names ("all" disables all)
+    pragmas: dict = field(default_factory=dict)
+    file_disables: set = field(default_factory=set)
+
+    @classmethod
+    def parse(cls, path: Path, rel: str, text: str) -> "Module":
+        tree = ast.parse(text, filename=rel)
+        mod = cls(
+            path=path, rel=rel, text=text, tree=tree,
+            lines=text.splitlines(),
+        )
+        mod._scan_pragmas()
+        return mod
+
+    def _scan_pragmas(self) -> None:
+        try:
+            tokens = list(tokenize.generate_tokens(io.StringIO(self.text).readline))
+        except tokenize.TokenError:
+            tokens = []
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = PRAGMA_RE.search(tok.string)
+            if not m:
+                continue
+            names = {p.strip() for p in m.group("passes").split(",") if p.strip()}
+            if m.group("kind") == "disable-file":
+                self.file_disables |= names
+                continue
+            line = tok.start[0]
+            self.pragmas.setdefault(line, set()).update(names)
+            # A standalone pragma comment covers the next code line.
+            if self.lines[line - 1].lstrip().startswith("#"):
+                nxt = line + 1
+                while nxt <= len(self.lines) and (
+                    not self.lines[nxt - 1].strip()
+                    or self.lines[nxt - 1].lstrip().startswith("#")
+                ):
+                    nxt += 1
+                if nxt <= len(self.lines):
+                    self.pragmas.setdefault(nxt, set()).update(names)
+
+    def suppressed(self, pass_name: str, line: int) -> bool:
+        if pass_name in self.file_disables or "all" in self.file_disables:
+            return True
+        at = self.pragmas.get(line, ())
+        return pass_name in at or "all" in at
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+@dataclass
+class Project:
+    """The module set one ``run_lint`` call operates on."""
+
+    root: Path
+    modules: list = field(default_factory=list)
+
+    def module(self, rel: str):
+        for m in self.modules:
+            if m.rel == rel:
+                return m
+        return None
+
+
+class LintPass:
+    """Base class for a repro-lint pass.
+
+    Subclasses set ``name`` (the pragma token), ``code`` (RLnnn),
+    ``guideline`` (which docs/guidelines.md rule it mechanizes) and
+    ``description``, then implement ``check_module`` and/or
+    ``finalize``. ``applies_to`` scopes the per-file dispatch."""
+
+    name: str = "base"
+    code: str = "RL000"
+    guideline: str = ""
+    description: str = ""
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.endswith(".py")
+
+    def check_module(self, module: Module, project: Project):
+        return ()
+
+    def finalize(self, project: Project):
+        """Repo-wide checks run once after every module pass."""
+        return ()
+
+    def finding(
+        self, module: Module, node, message: str, *, line=None, col=None
+    ) -> Finding:
+        ln = line if line is not None else getattr(node, "lineno", 1)
+        cl = col if col is not None else getattr(node, "col_offset", 0)
+        return Finding(
+            file=module.rel,
+            line=ln,
+            col=cl,
+            pass_name=self.name,
+            code=self.code,
+            message=message,
+            guideline=self.guideline,
+            snippet=module.snippet(ln),
+        )
+
+
+def _iter_py_files(paths: list[Path]):
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in SKIP_DIRS for part in f.parts):
+                    yield f
+
+
+def _parse_error_finding(rel: str, exc: SyntaxError) -> Finding:
+    return Finding(
+        file=rel,
+        line=exc.lineno or 1,
+        col=exc.offset or 0,
+        pass_name="parse",
+        code="RL000",
+        message=f"cannot parse: {exc.msg}",
+    )
+
+
+def build_project(paths: list[str | Path], root: str | Path) -> tuple:
+    """Parse every .py under ``paths``; returns (Project, parse_findings)."""
+    root = Path(root).resolve()
+    project = Project(root=root)
+    errors: list[Finding] = []
+    seen: set = set()
+    for f in _iter_py_files([Path(p) for p in paths]):
+        f = f.resolve()
+        if f in seen:
+            continue
+        seen.add(f)
+        try:
+            rel = f.relative_to(root).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        text = f.read_text()
+        try:
+            project.modules.append(Module.parse(f, rel, text))
+        except SyntaxError as e:
+            errors.append(_parse_error_finding(rel, e))
+    return project, errors
+
+
+def run_passes(project: Project, passes) -> list[Finding]:
+    """Dispatch passes per file, then repo-wide; apply pragma filters."""
+    findings: list[Finding] = []
+    for p in passes:
+        for mod in project.modules:
+            if p.applies_to(mod.rel):
+                findings.extend(p.check_module(mod, project))
+        findings.extend(p.finalize(project))
+    out = []
+    for f in findings:
+        mod = project.module(f.file)
+        if mod is not None and mod.suppressed(f.pass_name, f.line):
+            continue
+        out.append(f)
+    out.sort(key=lambda f: (f.file, f.line, f.col, f.code))
+    return out
+
+
+def run_lint(
+    paths: list[str | Path],
+    *,
+    root: str | Path,
+    passes=None,
+    select: set | None = None,
+) -> list[Finding]:
+    """Lint ``paths``: parse, dispatch, pragma-filter. Baseline handling
+    is the caller's job (``split_baselined``)."""
+    if passes is None:
+        from tools.lint.passes import ALL_PASSES
+
+        passes = ALL_PASSES
+    if select:
+        passes = [p for p in passes if p.name in select]
+    project, errors = build_project(paths, root)
+    return errors + run_passes(project, passes)
+
+
+def lint_source(
+    text: str,
+    *,
+    rel: str = "fixture.py",
+    passes=None,
+    root: str | Path = ".",
+    extra_files: dict | None = None,
+) -> list[Finding]:
+    """Lint an in-memory source string (the test fixture entry point).
+
+    ``extra_files`` maps extra relpaths to source text, for passes whose
+    verdict spans files (e.g. choice-set's docs comparison)."""
+    if passes is None:
+        from tools.lint.passes import ALL_PASSES
+
+        passes = ALL_PASSES
+    project = Project(root=Path(root).resolve())
+    errors: list[Finding] = []
+    all_files = {rel: text, **(extra_files or {})}
+    for r, t in all_files.items():
+        try:
+            project.modules.append(Module.parse(Path(r), r, t))
+        except SyntaxError as e:
+            errors.append(_parse_error_finding(r, e))
+    return errors + run_passes(project, passes)
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: str | Path) -> list[dict]:
+    p = Path(path)
+    if not p.exists():
+        return []
+    data = json.loads(p.read_text())
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: str | Path, findings: list[Finding]) -> None:
+    entries = [
+        {
+            "file": f.file,
+            "pass": f.pass_name,
+            "line": f.line,
+            "snippet": f.snippet,
+        }
+        for f in findings
+    ]
+    Path(path).write_text(
+        json.dumps({"findings": entries}, indent=2) + "\n"
+    )
+
+
+def split_baselined(
+    findings: list[Finding], baseline: list[dict]
+) -> tuple[list[Finding], list[Finding], list[dict]]:
+    """(new, grandfathered, stale_entries). An entry matches one finding
+    with the same (file, pass, snippet) -- line numbers may drift."""
+    pool: dict[tuple, int] = {}
+    for e in baseline:
+        k = (e.get("file"), e.get("pass"), e.get("snippet", ""))
+        pool[k] = pool.get(k, 0) + 1
+    new, old = [], []
+    for f in findings:
+        k = f.key()
+        if pool.get(k, 0) > 0:
+            pool[k] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    stale = []
+    for e in baseline:
+        k = (e.get("file"), e.get("pass"), e.get("snippet", ""))
+        if pool.get(k, 0) > 0:
+            pool[k] -= 1
+            stale.append(e)
+    return new, old, stale

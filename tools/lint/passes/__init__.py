@@ -1,0 +1,16 @@
+"""The repro-lint pass registry. Order = report/report-code order."""
+from tools.lint.passes.host_sync import HostSyncPass
+from tools.lint.passes.scatter_determinism import ScatterDeterminismPass
+from tools.lint.passes.compat_shim import CompatShimPass
+from tools.lint.passes.choice_set import ChoiceSetPass
+from tools.lint.passes.recompile_hazard import RecompileHazardPass
+
+ALL_PASSES = (
+    HostSyncPass(),
+    ScatterDeterminismPass(),
+    CompatShimPass(),
+    ChoiceSetPass(),
+    RecompileHazardPass(),
+)
+
+PASS_BY_NAME = {p.name: p for p in ALL_PASSES}

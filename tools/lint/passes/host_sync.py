@@ -1,0 +1,126 @@
+"""host-sync (RL001): no device->host round-trips in round-loop code.
+
+The paper's adaptations (and the ROADMAP device-resident-loop item) say
+per-level host round-trips dominate small-n wall clock: every
+``int()`` / ``bool()`` / ``float()`` / ``.item()`` / ``np.asarray`` on
+a traced value blocks on the device stream. This pass flags those
+conversions inside **sync-sensitive functions**:
+
+* functions jit-decorated (``@jax.jit`` / ``@partial(jax.jit, ...)``),
+* functions calling ``lax.while_loop`` / ``fori_loop`` / ``scan``
+  directly (round bodies), and
+* host-side **driver** functions that call a module-jitted callable
+  (the frontier engines' level loops).
+
+A value is "device-derived" when its expression mentions a
+``jnp.``/``jax.``/``lax.`` call, a call to a module-jitted function, or
+a name assigned from one (``.shape``/``.ndim``-style static reads are
+exempt). Intentional level-loop syncs -- the frontier engines' shrink
+decisions, end-of-run stats materialization -- carry
+``# repro-lint: disable=host-sync`` pragmas with a reason.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import astutil
+from tools.lint.core import LintPass, Module, Project
+
+_CONTROL_FLOW = (
+    "lax.while_loop",
+    "jax.lax.while_loop",
+    "lax.fori_loop",
+    "jax.lax.fori_loop",
+    "lax.scan",
+    "jax.lax.scan",
+)
+
+_CONVERTERS = ("int", "bool", "float")
+_ASARRAY = ("np.asarray", "numpy.asarray", "onp.asarray")
+
+
+def _calls_any(fn: ast.FunctionDef, names) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            cn = astutil.call_name(node)
+            if cn in names:
+                return True
+    return False
+
+
+def _calls_jitted(fn: ast.FunctionDef, jitted: dict) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            cn = astutil.call_name(node)
+            if cn is not None and cn.split(".")[-1] in jitted:
+                return True
+    return False
+
+
+class HostSyncPass(LintPass):
+    name = "host-sync"
+    code = "RL001"
+    guideline = "G3"
+    description = (
+        "device->host conversions (int/bool/float/.item/np.asarray) in "
+        "jitted or round-loop code"
+    )
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.endswith(".py") and not rel.startswith("tests/")
+
+    def check_module(self, module: Module, project: Project):
+        jitted = astutil.module_jitted(module.tree)
+        sensitive_roots = []
+        for info in astutil.iter_functions(module.tree):
+            if info.parents:
+                continue  # nested defs are covered via their root
+            fn = info.node
+            if (
+                info.is_jitted
+                or _calls_any(fn, _CONTROL_FLOW)
+                or _calls_jitted(fn, jitted)
+            ):
+                sensitive_roots.append(fn)
+        for fn in sensitive_roots:
+            tainted = astutil.function_taint(fn, jitted)
+            yield from self._check_fn(module, fn, tainted, jitted)
+
+    def _check_fn(self, module, fn, tainted, jitted):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            cn = astutil.call_name(node)
+            if cn in _CONVERTERS and len(node.args) == 1:
+                if astutil.expr_is_device(node.args[0], tainted, jitted):
+                    yield self.finding(
+                        module,
+                        node,
+                        f"`{cn}()` on a device value in `{fn.name}` forces "
+                        "a device->host sync per call; keep the loop "
+                        "device-resident (lax.while_loop carry) or pragma "
+                        "as an intentional level-loop sync",
+                    )
+            elif cn in _ASARRAY and node.args:
+                if astutil.expr_is_device(node.args[0], tainted, jitted):
+                    yield self.finding(
+                        module,
+                        node,
+                        f"`{cn}()` on a device value in `{fn.name}` "
+                        "synchronously copies device->host; move the "
+                        "materialization out of the round path or pragma "
+                        "as an intentional sync",
+                    )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and not node.args
+            ):
+                if astutil.expr_is_device(node.func.value, tainted, jitted):
+                    yield self.finding(
+                        module,
+                        node,
+                        f"`.item()` on a device value in `{fn.name}` is a "
+                        "blocking scalar readback; thread the scalar "
+                        "through the loop carry instead",
+                    )

@@ -1,0 +1,153 @@
+"""recompile-hazard (RL005): data-dependent shapes go through buckets.
+
+XLA compiles per shape (docs/guidelines.md G5): a compiled-shape
+argument derived from a **data-dependent host int** -- ``int()`` /
+``float()`` / ``.item()`` of a device value, e.g. a live-frontier count
+-- recompiles on every distinct value. The repo's discipline (the
+frontier engines' shrink ladder, the serve engines' capacity buckets)
+is to quantize such ints onto a static ladder first: ``next_pow2``,
+``pad_to`` / ``_pad_to``, ``tour_capacity``,
+``frontier_sparse_capacity``, ``default_sparse_capacity``.
+
+This pass taints names assigned from host-materialized device scalars
+and flags tainted expressions reaching a compile-shape sink:
+
+* a ``static_argnames`` kwarg of a module-jitted function,
+* shape-carrying kwargs anywhere (``size=``, ``shape=``, ``pad_to=``,
+  ``pad_edges_to=``, ``capacity=``, ``num_splitters=``),
+* the shape argument of ``jnp.zeros/ones/full/empty/arange``, and
+* any argument of a ``pallas_call``.
+
+Routing the value through a quantizer (above) clears the taint.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import astutil
+from tools.lint.core import LintPass, Module, Project
+
+SANITIZERS = frozenset(
+    {
+        "next_pow2",
+        "pad_to",
+        "_pad_to",
+        "tour_capacity",
+        "frontier_sparse_capacity",
+        "default_sparse_capacity",
+    }
+)
+
+_SHAPE_KWARGS = {
+    "size",
+    "shape",
+    "pad_to",
+    "pad_edges_to",
+    "capacity",
+    "sparse_capacity",
+    "num_splitters",
+}
+
+_SHAPE_CTORS = {
+    "jnp.zeros",
+    "jnp.ones",
+    "jnp.full",
+    "jnp.empty",
+    "jnp.arange",
+    "jnp.broadcast_to",
+}
+
+
+def _mentions_tainted(expr: ast.AST, tainted: set) -> bool:
+    """A tainted name referenced outside any sanitizer call."""
+
+    def visit(node) -> bool:
+        if isinstance(node, ast.Call):
+            cn = astutil.call_name(node)
+            base = cn.split(".")[-1] if cn else None
+            if base in SANITIZERS:
+                return False
+            return any(visit(c) for c in ast.iter_child_nodes(node))
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        return any(visit(c) for c in ast.iter_child_nodes(node))
+
+    return visit(expr)
+
+
+class RecompileHazardPass(LintPass):
+    name = "recompile-hazard"
+    code = "RL005"
+    guideline = "G5"
+    description = (
+        "data-dependent host ints reaching compiled shapes must be "
+        "bucketed (next_pow2/pad_to/capacity)"
+    )
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.endswith(".py") and not rel.startswith("tests/")
+
+    def check_module(self, module: Module, project: Project):
+        jitted = astutil.module_jitted(module.tree)
+        for info in astutil.iter_functions(module.tree):
+            if info.parents:
+                continue  # closures share the root function's taint walk
+            tainted = astutil.function_taint(
+                info.node,
+                jitted,
+                seed_calls=("int", "float"),
+                skip_calls=SANITIZERS,
+            )
+            if not tainted:
+                continue
+            yield from self._check_fn(module, info.node, tainted, jitted)
+
+    def _check_fn(self, module, fn, tainted, jitted):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            cn = astutil.call_name(node)
+            base = cn.split(".")[-1] if cn else None
+            if base in SANITIZERS:
+                continue
+            statics = jitted.get(base, ()) if base else ()
+            is_pallas = base == "pallas_call" or (
+                cn and cn.endswith(".pallas_call")
+            )
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                hazardous = (
+                    kw.arg in statics
+                    or kw.arg in _SHAPE_KWARGS
+                    or is_pallas
+                )
+                if hazardous and _mentions_tainted(kw.value, tainted):
+                    yield self.finding(
+                        module,
+                        kw.value,
+                        f"`{kw.arg}=` at `{base}(...)` derives from a "
+                        "data-dependent host int: every distinct value "
+                        "recompiles; quantize via next_pow2/pad_to or a "
+                        "capacity bucket first",
+                    )
+            if cn in _SHAPE_CTORS and node.args:
+                if _mentions_tainted(node.args[0], tainted):
+                    yield self.finding(
+                        module,
+                        node.args[0],
+                        f"shape of `{cn}` derives from a data-dependent "
+                        "host int: every distinct value recompiles; "
+                        "quantize via next_pow2/pad_to first",
+                    )
+            elif is_pallas:
+                for arg in node.args:
+                    if _mentions_tainted(arg, tainted):
+                        yield self.finding(
+                            module,
+                            arg,
+                            "pallas_call argument derives from a "
+                            "data-dependent host int: every distinct "
+                            "value recompiles; quantize via "
+                            "next_pow2/pad_to first",
+                        )

@@ -1,0 +1,94 @@
+"""scatter-determinism (RL002): round bodies scatter with min/max only.
+
+The repo's arbitrary-CRCW adaptation (docs/guidelines.md G3,
+DESIGN/PAPER section 4) resolves concurrent hook writes with
+commutative-idempotent **min-scatters** (``.at[].min`` / ``.at[].max``),
+which is what keeps labels, round counts, and recorded spanning forests
+bit-identical across the dense / frontier / sharded engines. A
+``.at[].set`` or ``.at[].add`` whose index vector can contain
+duplicates resolves by execution order instead -- silently
+nondeterministic on parallel hardware.
+
+Scope: SV round/hook bodies -- any function whose enclosing-name chain
+matches ``sv<digit>`` / ``*round*`` / ``*hook*`` -- plus every file
+under ``src/repro/kernels/``. Within scope, ``.at[idx].set/add/...``
+with a non-constant index must be min/max, be pragma'd with a
+commutation argument (e.g. all winners write the same stamp ``s``), or
+be moved out of the round body.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.lint import astutil
+from tools.lint.core import LintPass, Module, Project
+
+_SCOPE_NAME = re.compile(r"(^|_)(sv\d|round|hook)")
+_NONCOMMUTATIVE = {"set", "add", "mul", "or_", "and_", "xor", "subtract"}
+
+
+def _in_scope(info: astutil.FuncInfo, rel: str) -> bool:
+    if "/kernels/" in rel:
+        return True
+    return any(_SCOPE_NAME.search(n) for n in info.qualnames)
+
+
+def _at_scatter(node: ast.Call):
+    """(array_expr, index_expr, method) for ``X.at[idx].method(...)``."""
+    f = node.func
+    if not (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Subscript)):
+        return None
+    sub = f.value
+    if not (isinstance(sub.value, ast.Attribute) and sub.value.attr == "at"):
+        return None
+    return sub.value.value, sub.slice, f.attr
+
+
+class ScatterDeterminismPass(LintPass):
+    name = "scatter-determinism"
+    code = "RL002"
+    guideline = "G3"
+    description = (
+        "only commutative-idempotent scatters (.at[].min/.at[].max) in "
+        "SV round/hook/kernel bodies"
+    )
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.endswith(".py") and not rel.startswith("tests/")
+
+    def check_module(self, module: Module, project: Project):
+        for info in astutil.iter_functions(module.tree):
+            if not _in_scope(info, module.rel):
+                continue
+            yield from self._check_fn(module, info)
+
+    def _check_fn(self, module, info):
+        # Walk only this function's own statements: nested defs get their
+        # own FuncInfo visit, so descending into them double-reports.
+        stack = list(ast.iter_child_nodes(info.node))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+            if not isinstance(node, ast.Call):
+                continue
+            hit = _at_scatter(node)
+            if hit is None:
+                continue
+            _arr, idx, method = hit
+            if method not in _NONCOMMUTATIVE:
+                continue
+            if isinstance(idx, ast.Constant):
+                continue  # scalar-constant target: no duplicates possible
+            yield self.finding(
+                module,
+                node,
+                f"`.at[].{method}` in round/hook body `{info.name}`: "
+                "duplicate index targets resolve by execution order, "
+                "breaking the deterministic min-CRCW tie-break; use "
+                ".at[].min/.at[].max, or pragma with the reason the "
+                "writes commute (same-value stamps, provably unique "
+                "indices)",
+            )

@@ -48,7 +48,8 @@ def run(n: int | None = None) -> list[str]:
         if n <= 200_000:
             t0 = time.perf_counter()
             serial_connected_components(edges, n)
-            t_ser = time.perf_counter() - t0
+            # host-only numpy union-find: nothing async to block on
+            t_ser = time.perf_counter() - t0  # repro-lint: disable=block-timer
             lines.append(emit(f"fig4/serial/{fam}/n={n}", t_ser * 1e6, f"m={m}"))
         dense_touched = 2 * st.m2 * int(rounds)
         lines.append(

@@ -127,6 +127,7 @@ def main(argv=None) -> None:
         moe_dispatch,
         multidev_scaling,
         roofline_table,
+        serve_chaos,
         table2_packing,
         table3_splitters,
         tree_ops,
@@ -141,6 +142,7 @@ def main(argv=None) -> None:
         ("cc_frontier", cc_frontier.run),
         ("tree_ops", tree_ops.run),
         ("graph_serve", graph_serve.run),
+        ("serve_chaos", serve_chaos.run),
         ("fig5_parallelism", fig5_parallelism.run),
         ("fig6_rounds", fig6_rounds.run),
         ("moe_dispatch", moe_dispatch.run),

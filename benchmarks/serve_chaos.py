@@ -1,0 +1,100 @@
+"""Chaos-smoke: graph serving under a deterministic fault plan.
+
+Replays a KISS-deterministic request stream through
+``repro.serve.GraphServeEngine`` with a seeded ``FaultPlan`` (poison +
+transient + forced-nonconvergence injections, plus a simulated OOM on
+the stream's own first-wave bucket) and emits the containment health
+counters -- completed/failed/retried/quarantined/degraded/bisections/
+wave_runs. Everything in ``derived`` is deterministic: the plan is
+seeded, the stream is seeded, and the containment pipeline
+(``serve/waves.py``) is sequential -- so ``run.py --check`` guards the
+counters against ``BENCH_smoke.json`` in both CI lanes exactly like
+the packing counters. A drift here means the containment semantics
+changed: retry budgets, bisection probe order, or degradation
+re-packing.
+
+Wall time per request (faulty vs clean run of the same stream) is
+printed as a comment only -- the overhead of containment is bisection
+probes and degraded re-packs, which the ``wave_runs`` counter already
+pins exactly.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit
+from repro.data.graphs import graph_request_stream
+from repro.serve import FaultPlan, GraphRequest, GraphServeEngine
+
+
+def _requests(stream):
+    return [GraphRequest(uid=i, **g) for i, g in enumerate(stream)]
+
+
+def _serve(stream, plan=None) -> GraphServeEngine:
+    eng = GraphServeEngine(max_requests=8, fault_plan=plan, max_retries=2)
+    for r in _requests(stream):
+        eng.submit(r)
+    eng.run()
+    return eng
+
+
+def run(num_requests: int | None = None) -> list[str]:
+    R = num_requests or max(16, int(800 * SCALE))
+    lines = []
+    stream = graph_request_stream(R, kind="cc", family="random", seed=29)
+
+    # clean baseline (no plan): containment machinery at zero overhead
+    t0 = time.perf_counter()
+    clean = _serve(stream)
+    # host-driven wave loop: _run_wave materializes results via
+    # np.asarray, so the run is synced when it returns
+    t_clean = time.perf_counter() - t0  # repro-lint: disable=block-timer
+    h = clean.health_records[-1]
+    lines.append(emit(
+        f"serve_chaos/clean/req={R}",
+        t_clean / R * 1e6,
+        f"completed={h.completed};failed={h.failed};"
+        f"wave_runs={h.wave_runs};waves={clean.waves}",
+    ))
+
+    # seeded chaos: poison + transient + forced-nonconvergence uids,
+    # plus an OOM on the first wave's own bucket (degradation path)
+    plan = FaultPlan.random(
+        31, range(R), p_poison=0.08, p_transient=0.12, max_transient=2,
+        p_nonconverge=0.04,
+    )
+    probe = GraphServeEngine(max_requests=8)
+    first_cap, _ = probe._wave_caps(_requests(stream)[:8])
+    plan = FaultPlan(
+        poison_uids=plan.poison_uids,
+        transient_uids=plan.transient_uids,
+        nonconverge_uids=plan.nonconverge_uids,
+        oom_node_caps=frozenset([first_cap]),
+    )
+    # the gap since the clean run's read is plan setup, not a timed
+    # interval; the chaos interval itself is host-synced (see above)
+    t0 = time.perf_counter()  # repro-lint: disable=block-timer
+    eng = _serve(stream, plan)
+    t_chaos = time.perf_counter() - t0  # repro-lint: disable=block-timer
+    h = eng.health_records[-1]
+    lines.append(emit(
+        f"serve_chaos/faulty/req={R}",
+        t_chaos / R * 1e6,
+        f"completed={h.completed};failed={h.failed};"
+        f"retried={h.retried};quarantined={h.quarantined};"
+        f"degraded={h.degraded};bisections={h.bisections};"
+        f"wave_runs={h.wave_runs}",
+    ))
+    print(
+        f"# serve_chaos: {h.failed}/{R} quarantined, "
+        f"{h.wave_runs - clean.health_records[-1].wave_runs} extra wave "
+        f"runs for containment "
+        f"({t_chaos / max(t_clean, 1e-12):.2f}x clean wall)",
+        flush=True,
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,7 @@ from repro.core.components import (
     num_components,
     dedup_edges,
     check_choice,
+    ConvergenceError,
 )
 from repro.core.frontier import frontier_shiloach_vishkin, FrontierStats
 from repro.core.pram import (
@@ -368,6 +369,7 @@ __all__ = [
     "FrontierStats",
     "label_propagation",
     "sv_round_bound",
+    "ConvergenceError",
     "num_components",
     "dedup_edges",
     "striding_indices",

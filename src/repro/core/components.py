@@ -50,6 +50,18 @@ def sv_round_bound(n: int) -> int:
     return int(math.floor(math.log(max(n, 2)) / math.log(1.5))) + 2
 
 
+class ConvergenceError(RuntimeError):
+    """A bounded round/walk loop hit its bound without reaching a
+    fixpoint. Labels past the bound would be WRONG (an un-hooked edge
+    still straddles two components), so every host-driven engine raises
+    this instead of returning them -- a silent bound-hit is exactly how
+    a broken invariant (e.g. a nondeterministic scatter, guideline G3 /
+    RL002) would otherwise leak wrong results. Fully traced callers
+    (``jax.jit`` over the dense walks) cannot raise on a device value;
+    they keep the documented return-at-bound behavior, and the serve
+    path fails just the offending wave (``docs/serving.md``)."""
+
+
 def _identity_merge(arr, base, aux, s):
     del base, s
     return arr, aux
@@ -308,10 +320,17 @@ def sv_run(
     edge-shard unions, so inserting the merges at these two points
     changes who walks each edge and nothing else.
 
+    Returns ``(D, rounds, converged[, hooks][, aux])``. ``converged``
+    is the fixpoint sentinel carried out of the while-loop: True iff
+    the loop exited because a round made no change (the final carried
+    ``changed`` flag), False iff it exited at ``bound`` with changes
+    still flowing -- the case host-driven callers turn into
+    ``ConvergenceError`` instead of returning wrong labels.
+
     ``record_hooks=True`` additionally returns the ``(hook_u, hook_v)``
     winning-hook-edge arrays (see ``init_hooks``; ``merge_hooks`` is
-    their cross-replica pmin in the sharded engine) right after the
-    rounds, i.e. the return becomes ``(D, rounds, hooks[, aux])``.
+    their cross-replica pmin in the sharded engine) right after
+    ``converged``.
     """
     # SV0: D(0)[j] = j, Q[j] = 0
     D0 = jnp.arange(n, dtype=jnp.int32)
@@ -329,11 +348,13 @@ def sv_run(
         _D, _Q, _aux, s, changed = carry
         return jnp.logical_and(changed, s <= bound)
 
-    D, _Q, aux, s, _ = jax.lax.while_loop(
+    D, _Q, aux, s, changed = jax.lax.while_loop(
         cond, round_body, (D0, Q0, aux, jnp.int32(1), jnp.bool_(True))
     )
     D = sv_compress(D, n)
-    out = (D, s - 1)
+    # The loop exits with changed=False at a fixpoint, or changed=True
+    # when round `bound` still hooked something -- NOT converged.
+    out = (D, s - 1, jnp.logical_not(changed))
     if record_hooks:
         hooks, aux = aux
         out = out + (hooks,)
@@ -408,15 +429,35 @@ def shiloach_vishkin(
     ``record_hooks=True`` appends the spanning-forest hook record
     ``(hook_u, hook_v)`` (see ``init_hooks``) without changing labels
     or round counts; ``repro.trees.spanning_forest`` is the consumer.
+
+    Hitting ``max_rounds`` without a fixpoint raises
+    ``ConvergenceError`` instead of returning wrong labels (host calls
+    only; under a ``jax.jit`` trace the sentinel cannot raise and the
+    bounded result is returned as before). The default bound is the
+    paper's proven ceiling, so the sentinel only ever fires on an
+    explicit too-small ``max_rounds`` or a broken round invariant.
     """
+    from repro.compat import is_tracer
+
     n = num_nodes
     check_choice("hook_impl", hook_impl, HOOK_IMPLS)
     bound = max_rounds if max_rounds is not None else sv_round_bound(n)
     src, dst = _maybe_dedup(src, dst, dedup)
-    return _sv_dense(
+    out = _sv_dense(
         jnp.asarray(src), jnp.asarray(dst), n, bound, hook_impl,
         record_hooks,
     )
+    labels, rounds, converged = out[0], out[1], out[2]
+    if not is_tracer(converged):
+        # Intentional terminal sync: the sentinel must be read before
+        # wrong labels can escape (docstring above).
+        if not bool(converged):  # repro-lint: disable=host-sync
+            raise ConvergenceError(
+                f"shiloach_vishkin hit max_rounds={bound} before the "
+                f"label fixpoint on {n} nodes; raise max_rounds (the "
+                f"proven bound is sv_round_bound(n)={sv_round_bound(n)})"
+            )
+    return (labels, rounds) + out[3:]
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "max_rounds"))

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.components import (
     HOOK_IMPLS,
+    ConvergenceError,
     _maybe_dedup,
     check_choice,
     init_hooks,
@@ -273,7 +274,8 @@ def frontier_shiloach_vishkin(
         # the shrink ladder -- the paper's level-synchronous design.
         stats.edges_touched += passes * int(rounds) * m2_level  # repro-lint: disable=host-sync
         stats.levels.append((m2_level, int(rounds)))  # repro-lint: disable=host-sync
-        if not bool(changed) or int(s) > bound:  # repro-lint: disable=host-sync
+        converged = not bool(changed)  # repro-lint: disable=host-sync
+        if converged or int(s) > bound:  # repro-lint: disable=host-sync
             break
         # Shrink: the masked frontier fits the next power-of-two bucket.
         live = int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
@@ -288,6 +290,15 @@ def frontier_shiloach_vishkin(
         a, b = compact_frontier(a, b, fmask, size=new_size)
         m2_level = new_size
 
+    if not converged:
+        # The level loop ran out of round budget with hooks still
+        # flowing: labels would be wrong, so fail loudly (the
+        # convergence sentinel; see core.components.ConvergenceError).
+        raise ConvergenceError(
+            f"frontier_shiloach_vishkin hit its round bound ({bound}"
+            f"{f', incl. {sample_rounds} sampling rounds' if sample_rounds else ''})"
+            f" before the label fixpoint on {n} nodes; raise max_rounds"
+        )
     D = sv_compress(D, n)
     # Terminal readback: the loop above already synced on s every level.
     rounds_total = int(s) - 1  # repro-lint: disable=host-sync

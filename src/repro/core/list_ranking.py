@@ -250,7 +250,9 @@ def _random_splitter_core(
     else:
         active_fn, step_fn = aos_walk_fns(succ, is_stop, lanes)
 
-    final, steps = lockstep_walk(state, active_fn, step_fn, max_steps=max_steps)
+    final, steps, converged = lockstep_walk(
+        state, active_fn, step_fn, max_steps=max_steps
+    )
 
     if pack_mode == "soa":
         owner, local = final["store"]
@@ -292,7 +294,7 @@ def _random_splitter_core(
         # one row gather yields (local, owner) together
         rank = rank_sp[packed[:, 1]] - packed[:, 0]
 
-    return rank, final["dist"], steps
+    return rank, final["dist"], steps, converged
 
 
 def random_splitter_rank(
@@ -314,7 +316,14 @@ def random_splitter_rank(
     XLA elsewhere; "pallas"/"pallas_interpret" force the kernel path
     (interpreted off-TPU). Unknown strings raise (they used to fall
     through to the XLA path silently).
+
+    If ``max_steps`` cuts the lockstep walk off before every lane
+    reaches its splitter, the ranks would be wrong -- host calls raise
+    ``ConvergenceError`` instead of returning them (under a ``jax.jit``
+    trace the sentinel cannot raise; the bounded state is returned).
     """
+    from repro.compat import is_tracer
+    from repro.core.components import ConvergenceError
     from repro.kernels import on_tpu
 
     check_choice("pack_mode", pack_mode, PACK_MODES)
@@ -328,10 +337,19 @@ def random_splitter_rank(
         p = min(p, n)
         splitters = select_splitters(n, p, seed=seed, head=head)
     splitters = np.asarray(splitters)
-    rank, sublens, steps = _random_splitter_core(
+    rank, sublens, steps, converged = _random_splitter_core(
         succ, jnp.asarray(splitters), pack_mode=pack_mode,
         max_steps=max_steps, kernel_impl=kernel_impl,
     )
+    if max_steps is not None and not is_tracer(converged):
+        # Intentional terminal sync: the walk sentinel must be read
+        # before truncated (wrong) ranks can escape.
+        if not bool(converged):  # repro-lint: disable=host-sync
+            raise ConvergenceError(
+                f"random_splitter_rank walk hit max_steps={max_steps} "
+                "with lanes still active; ranks would be truncated -- "
+                "raise max_steps or add splitters"
+            )
     if not with_stats:
         return rank
     # Opt-in stats materialization after the walk finished.

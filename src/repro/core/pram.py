@@ -62,7 +62,7 @@ def lockstep_walk(
     active_fn: Callable[[Any], Array],
     step_fn: Callable[[Any, Array], Any],
     max_steps: int | None = None,
-) -> tuple[Any, Array]:
+) -> tuple[Any, Array, Array]:
     """Run per-lane walks in SIMD lockstep until every lane is done.
 
     Args:
@@ -73,9 +73,14 @@ def lockstep_walk(
         max_steps: optional hard bound (safety for adversarial inputs).
 
     Returns:
-        (final_state, steps_taken). steps_taken is the trip count = the
-        maximum lane walk length, i.e. the divergence cost the paper's
-        Table 3 measures via sub-list length distributions.
+        (final_state, steps_taken, converged). steps_taken is the trip
+        count = the maximum lane walk length, i.e. the divergence cost
+        the paper's Table 3 measures via sub-list length distributions.
+        converged is the fixpoint sentinel: True iff every lane
+        finished, False iff ``max_steps`` cut lanes off mid-walk (the
+        final state would be WRONG for those lanes -- host-driven
+        callers raise ``ConvergenceError`` on it; always True when
+        ``max_steps`` is None).
     """
 
     def cond(carry):
@@ -91,4 +96,5 @@ def lockstep_walk(
         return step_fn(state, active), steps + 1
 
     final, steps = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
-    return final, steps
+    converged = jnp.logical_not(jnp.any(active_fn(final)))
+    return final, steps, converged

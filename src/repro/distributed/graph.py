@@ -60,9 +60,10 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.compat import Mesh
+from repro.compat import Mesh, is_tracer
 from repro.core.components import (
     HOOK_IMPLS,
+    ConvergenceError,
     _maybe_dedup,
     check_choice,
     init_hooks,
@@ -248,9 +249,11 @@ def _sharded_sv(a, b, *, num_nodes, max_rounds, mesh, axis, exchange,
             record_hooks=record_hooks, merge_hooks=mh,
         )
 
-    out_specs = (P(), P(), (P(), P()))
+    # sv_run returns (D, rounds, converged[, hooks], aux) -- converged
+    # is the replicated fixpoint sentinel (see ConvergenceError).
+    out_specs = (P(), P(), P(), (P(), P()))
     if record_hooks:
-        out_specs = (P(), P(), (P(), P()), (P(), P()))
+        out_specs = (P(), P(), P(), (P(), P()), (P(), P()))
     return compat.shard_map(
         block,
         mesh=mesh,
@@ -333,11 +336,27 @@ def sharded_shiloach_vishkin(
         record_hooks=record_hooks,
     )
     if record_hooks:
-        labels, rounds, hooks, (words, frontier) = res
+        labels, rounds, converged, hooks, (words, frontier) = res
         out = (labels, rounds, hooks)
     else:
-        labels, rounds, (words, frontier) = res
+        labels, rounds, converged, (words, frontier) = res
         out = (labels, rounds)
+    if not is_tracer(converged):
+        # Intentional terminal sync: the fixpoint sentinel must be read
+        # before wrong labels can escape (labels are replicated, so the
+        # flag is device-agreed). Traced callers keep the documented
+        # return-at-bound behavior.
+        if not bool(converged):  # repro-lint: disable=host-sync
+            bound = (
+                max_rounds if max_rounds is not None
+                else sv_round_bound(num_nodes)
+            )
+            raise ConvergenceError(
+                f"sharded_shiloach_vishkin hit max_rounds={bound} "
+                f"before the label fixpoint on {num_nodes} nodes; raise "
+                "max_rounds (the proven bound is sv_round_bound(n)="
+                f"{sv_round_bound(num_nodes)})"
+            )
     if not with_stats:
         return out
     # Opt-in stats materialization: with_stats=True is an explicit ask to
@@ -604,7 +623,8 @@ def sharded_frontier_shiloach_vishkin(
         # shrink ladder -- same level-synchronous design as frontier.py.
         stats.edges_touched += passes * int(rounds) * bucket  # repro-lint: disable=host-sync
         stats.levels.append((bucket, int(rounds)))  # repro-lint: disable=host-sync
-        if not bool(changed) or int(s) > bound:  # repro-lint: disable=host-sync
+        converged = not bool(changed)  # repro-lint: disable=host-sync
+        if converged or int(s) > bound:  # repro-lint: disable=host-sync
             break
         # Shrink: every shard drops to the power-of-two bucket covering
         # the LARGEST per-device live count (one shared compiled shape).
@@ -618,6 +638,13 @@ def sharded_frontier_shiloach_vishkin(
         )
         bucket = new_bucket
 
+    if not converged:
+        raise ConvergenceError(
+            f"sharded frontier SV hit its round bound ({bound}) before the"
+            f" label fixpoint on {n} nodes across {nd} devices; the labels"
+            " at the bound are NOT components -- raise max_rounds (the"
+            f" proven bound is sv_round_bound(n)={sv_round_bound(n)})"
+        )
     D = sv_compress(D, n)
     # Terminal readback: the loop above already synced on s every level.
     rounds_total = int(s) - 1  # repro-lint: disable=host-sync
@@ -684,7 +711,7 @@ def _sharded_rs(
         # Walk predicate + scatter are the single-device ones (shared
         # code); only the lane ids are offset and padded lanes masked.
         active_fn, step_fn = aos_walk_fns(succ, is_stop, lanes, valid=valid)
-        final, steps = lockstep_walk(
+        final, steps, converged = lockstep_walk(
             state, active_fn, step_fn, max_steps=max_steps
         )
         (pk,) = final["store"]
@@ -738,13 +765,16 @@ def _sharded_rs(
             rank_blk = rank_sp[own_blk] - loc_blk
 
         steps = jax.lax.pmax(steps, axis)  # global trip count
-        return rank_blk, dist_full, steps
+        # Fixpoint sentinel: converged only if EVERY device's lanes
+        # finished -- pmin of the per-device flags is the global AND.
+        converged = jax.lax.pmin(converged.astype(jnp.int32), axis)
+        return rank_blk, dist_full, steps, converged
 
     return compat.shard_map(
         block,
         mesh=mesh,
         in_specs=(P(), P()),
-        out_specs=(P(axis), P(), P()),
+        out_specs=(P(axis), P(), P(), P()),
         check_vma=False,
     )(succ, spl_pad)
 
@@ -794,7 +824,7 @@ def sharded_random_splitter_rank(
     pp = max(-(-p // nd) * nd, nd)  # lane padding (masked inert)
     npad = max(-(-n // nd) * nd, nd)  # node padding for the RS5 out shard
     spl_pad = _pad_to(jnp.asarray(splitters, jnp.int32), pp, 0)
-    rank_pad, sublens, steps = _sharded_rs(
+    rank_pad, sublens, steps, converged = _sharded_rs(
         succ,
         spl_pad,
         n=n,
@@ -807,6 +837,16 @@ def sharded_random_splitter_rank(
         kernel_impl=kernel_impl,
     )
     rank = rank_pad[:n]
+    if max_steps is not None and not is_tracer(converged):
+        # Host-driven callers get the fixpoint guarantee; a traced
+        # caller cannot raise on a device value and keeps the
+        # return-at-bound behavior.
+        if not bool(converged):  # repro-lint: disable=host-sync
+            raise ConvergenceError(
+                f"sharded_random_splitter_rank hit max_steps={max_steps}"
+                f" with unfinished lanes ({p} splitters, {n} nodes); the"
+                " ranks are NOT valid -- raise max_steps"
+            )
     if not with_stats:
         return rank
     # Opt-in stats materialization after the walk finished.

@@ -1,6 +1,18 @@
 """Serving engines: wave-batched LM decode and graph-analytics serving
-over one shared wave scheduler (``serve/waves.py``)."""
+over one shared wave scheduler (``serve/waves.py``) with fault
+containment (quarantine + bisection, bounded retry, graceful
+degradation — ``docs/serving.md``) and a deterministic fault-injection
+harness (``serve/faults.py``)."""
 from repro.serve.engine import OVERFLOW_POLICIES, Request, ServeEngine
+from repro.serve.faults import (
+    FaultPlan,
+    InjectedEngineError,
+    InjectedFault,
+    SimulatedOOM,
+    TransientFault,
+    classify_failure,
+    is_resource_exhausted,
+)
 from repro.serve.graph import (
     KINDS,
     GraphRequest,
@@ -8,7 +20,7 @@ from repro.serve.graph import (
     GraphServeEngine,
     WaveRecord,
 )
-from repro.serve.waves import WaveScheduler
+from repro.serve.waves import FAILURE_POLICIES, HealthRecord, WaveScheduler
 
 __all__ = [
     "Request",
@@ -20,4 +32,13 @@ __all__ = [
     "WaveRecord",
     "KINDS",
     "WaveScheduler",
+    "HealthRecord",
+    "FAILURE_POLICIES",
+    "FaultPlan",
+    "InjectedFault",
+    "InjectedEngineError",
+    "TransientFault",
+    "SimulatedOOM",
+    "classify_failure",
+    "is_resource_exhausted",
 ]

@@ -53,6 +53,8 @@ class Request:
     output: list[int] = field(default_factory=list)
     done: bool = False
     truncated: bool = False  # prompt clipped by on_overflow="truncate"
+    failed: bool = False  # quarantined by the containment layer
+    error: str | None = None  # captured failure, when failed
 
 
 class ServeEngine(WaveScheduler):
@@ -64,9 +66,15 @@ class ServeEngine(WaveScheduler):
         num_slots: int = 4,
         max_len: int = 256,
         on_overflow: str = "error",
+        max_retries: int = 1,
+        on_failure: str = "quarantine",
+        fault_plan=None,
     ):
         check_choice("on_overflow", on_overflow, OVERFLOW_POLICIES)
-        super().__init__()
+        super().__init__(
+            max_retries=max_retries, on_failure=on_failure,
+            fault_plan=fault_plan,
+        )
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -87,6 +95,7 @@ class ServeEngine(WaveScheduler):
         if not req.prompt:
             raise ValueError(f"request {req.uid}: empty prompt")
         if req.max_new_tokens <= 0:
+            self._register(req)  # delivered by the next run(); uid in flight
             req.done = True
             self.finished.append(req)
             return
@@ -107,7 +116,21 @@ class ServeEngine(WaveScheduler):
         self.queue = self.queue[self.num_slots:]
         return wave
 
+    def _degrade(self, wave: list[Request], exc: Exception) -> list | None:
+        """OOM-shaped failure: permanently halve the KV-cache width
+        (the (num_slots, max_len) allocation) and re-pack this wave
+        into narrower sub-waves. At one slot there is nothing left to
+        shrink, so the request quarantines."""
+        if self.num_slots <= 1 or len(wave) <= 1:
+            return None
+        self.num_slots = max(1, self.num_slots // 2)
+        k = self.num_slots
+        return [wave[i:i + k] for i in range(0, len(wave), k)]
+
     def _run_wave(self, wave: list[Request]):
+        if self.fault_plan is not None:
+            self.fault_plan.check_wave(wave)
+            self.fault_plan.check_slots(self.num_slots)
         cache = init_kv_cache(self.cfg, self.num_slots, self.max_len)
         pending = [list(r.prompt) for r in wave]
         active = [True] * len(wave)
@@ -147,6 +170,8 @@ class ServeEngine(WaveScheduler):
             pos += 1
 
     def run(self) -> list[Request]:
-        """Process the whole queue; returns finished requests in
-        completion order (zero-budget requests finish at submit)."""
+        """Process the whole queue; returns the requests that reached a
+        terminal state during THIS call (``done``, or ``failed`` under
+        injected/real faults) in completion order -- zero-budget
+        requests finish at submit and deliver with the next run."""
         return super().run()

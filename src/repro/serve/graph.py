@@ -98,6 +98,8 @@ class GraphRequest:
     kind: str = "analytics"
     result: GraphResult | None = None
     done: bool = False
+    failed: bool = False  # quarantined by the containment layer
+    error: str | None = None  # captured failure, when failed
 
     @property
     def num_edges(self) -> int:
@@ -137,6 +139,12 @@ class GraphServeEngine(WaveScheduler):
       (see module docstring) and the sampling pre-pass
       (``sample_rounds``) is rejected: it re-roots components by edge
       density, which packing changes -- it would break batched == solo.
+    * ``max_retries=`` / ``on_failure=`` (``"quarantine"`` default,
+      ``"raise"``) / ``fault_plan=`` -- the containment knobs
+      (``serve/waves.py``; failure semantics in ``docs/serving.md``).
+      An OOM-shaped wave failure permanently caps the packing budget to
+      half the failing bucket and re-packs smaller waves; a request is
+      only failed when it exhausts the device alone.
     """
 
     def __init__(
@@ -152,6 +160,9 @@ class GraphServeEngine(WaveScheduler):
         kernel_impl: str = "auto",
         num_splitters: int | None = None,
         mesh=None,
+        max_retries: int = 1,
+        on_failure: str = "quarantine",
+        fault_plan=None,
         **engine_kwargs,
     ):
         import repro.core as core
@@ -170,12 +181,19 @@ class GraphServeEngine(WaveScheduler):
                 "fixes dedup/record_hooks itself and the sampling "
                 "pre-pass would break batched == solo bit-exactness"
             )
-        super().__init__()
+        super().__init__(
+            max_retries=max_retries, on_failure=on_failure,
+            fault_plan=fault_plan,
+        )
         self.max_requests = max_requests
         self.max_nodes = max_nodes
         self.max_edges = max_edges
         self.min_nodes = min_nodes
         self.min_edges = min_edges
+        # Degradation caps (permanent, only ever lowered): the packing
+        # budget after OOM-shaped failures; see _degrade.
+        self._node_budget = max_nodes
+        self._edge_budget = max_edges
         if engine == "auto" and mesh is None and jax.device_count() == 1:
             engine = "dense"
         self.engine = engine
@@ -245,14 +263,15 @@ class GraphServeEngine(WaveScheduler):
         super().submit(req)
 
     def _next_wave(self) -> list[GraphRequest]:
-        """FIFO greedy packing under the node/edge budget."""
+        """FIFO greedy packing under the node/edge budget (the
+        degradation caps, when an OOM has lowered them)."""
         wave: list[GraphRequest] = []
         nodes = edges = 0
         while self.queue and len(wave) < self.max_requests:
             r = self.queue[0]
             if wave and (
-                nodes + r.num_nodes > self.max_nodes
-                or edges + r.num_edges > self.max_edges
+                nodes + r.num_nodes > self._node_budget
+                or edges + r.num_edges > self._edge_budget
             ):
                 break
             wave.append(self.queue.pop(0))
@@ -260,9 +279,58 @@ class GraphServeEngine(WaveScheduler):
             edges += r.num_edges
         return wave
 
+    def _wave_caps(self, wave: list[GraphRequest]) -> tuple[int, int]:
+        """The capacity bucket a wave maps to (same math as _run_wave)."""
+        n_union = sum(r.num_nodes for r in wave)
+        m_union = sum(r.num_edges for r in wave)
+        node_cap = max(self.min_nodes, next_pow2(n_union))
+        edge_cap = max(self.min_edges, next_pow2(max(m_union, 1)))
+        return node_cap, edge_cap
+
+    def _degrade(
+        self, wave: list[GraphRequest], exc: Exception
+    ) -> list[list[GraphRequest]] | None:
+        """OOM-shaped failure: permanently cap the packing budget to
+        half the failing bucket and re-pack this wave under it. A
+        singleton wave cannot shrink (its own bucket IS its size), so
+        it returns None and quarantines; lone requests larger than the
+        capped budget become singleton sub-waves and meet the same
+        fate if they still exhaust the device."""
+        if len(wave) == 1:
+            return None
+        node_cap, edge_cap = self._wave_caps(wave)
+        self._node_budget = min(
+            self._node_budget, max(self.min_nodes, node_cap // 2)
+        )
+        self._edge_budget = min(
+            self._edge_budget, max(self.min_edges, edge_cap // 2)
+        )
+        subs: list[list[GraphRequest]] = []
+        cur: list[GraphRequest] = []
+        nodes = edges = 0
+        for r in wave:
+            if cur and (
+                nodes + r.num_nodes > self._node_budget
+                or edges + r.num_edges > self._edge_budget
+            ):
+                subs.append(cur)
+                cur, nodes, edges = [], 0, 0
+            cur.append(r)
+            nodes += r.num_nodes
+            edges += r.num_edges
+        if cur:
+            subs.append(cur)
+        if len(subs) == 1:  # budget already below the floor: halve by count
+            mid = len(wave) // 2
+            subs = [wave[:mid], wave[mid:]]
+        return subs
+
     def _run_wave(self, wave: list[GraphRequest]):
         from repro.core import connected_components, num_components
         from repro.trees import spanning_forest, tree_analytics
+
+        if self.fault_plan is not None:
+            self.fault_plan.check_wave(wave)
 
         stage = KINDS[max(_STAGE[r.kind] for r in wave)]
         node_off = np.cumsum([0] + [r.num_nodes for r in wave])
@@ -270,6 +338,8 @@ class GraphServeEngine(WaveScheduler):
         m_union = sum(r.num_edges for r in wave)
         node_cap = max(self.min_nodes, next_pow2(n_union))
         edge_cap = max(self.min_edges, next_pow2(max(m_union, 1)))
+        if self.fault_plan is not None:
+            self.fault_plan.check_bucket(node_cap)
         src = np.zeros((edge_cap,), np.int32)  # pad: inert (0,0) self-loops
         dst = np.zeros((edge_cap,), np.int32)
         eo = 0
@@ -280,12 +350,17 @@ class GraphServeEngine(WaveScheduler):
 
         bucket = (stage, node_cap, edge_cap)
         new_bucket = bucket not in self._buckets
-        self._buckets.add(bucket)
 
         kw = dict(
             self.engine_kwargs, engine=self.engine, mesh=self.mesh,
             dedup=False,
         )
+        if self.fault_plan is not None and self.fault_plan.wants_nonconverge(
+            wave
+        ):
+            # Remove the round budget so the core engines' REAL
+            # ConvergenceError sentinel fires for this wave.
+            kw["max_rounds"] = 0
         ta = None
         if stage == "cc":
             labels, rounds = connected_components(src, dst, node_cap, **kw)
@@ -337,6 +412,10 @@ class GraphServeEngine(WaveScheduler):
             r.result = res
             r.done = True
 
+        # Bucket accounting only for waves that ran to completion: a
+        # wave that failed above (injected fault, OOM, engine error)
+        # never instantiated the bucket's compiled programs.
+        self._buckets.add(bucket)
         self.wave_records.append(WaveRecord(
             requests=len(wave), stage=stage,
             num_nodes=n_union, num_edges=m_union,
@@ -345,6 +424,9 @@ class GraphServeEngine(WaveScheduler):
         ))
 
     def run(self) -> list[GraphRequest]:
-        """Process the whole queue; returns finished requests with
-        ``result`` populated, in completion order."""
+        """Process the whole queue; returns the requests that reached a
+        terminal state during THIS call, in completion order:
+        ``result`` populated (``done``) or quarantined (``failed`` with
+        ``error`` set; only under injected/real faults -- see
+        ``docs/serving.md``)."""
         return super().run()

@@ -238,7 +238,7 @@ def test_choice_set_registry_matches_live_docs():
     )
     code = choice_set.code_choices(_ROOT)
     assert choice_set.compare(doc, code) == []
-    assert len(code) == 8
+    assert len(code) == 9
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +294,74 @@ def test_recompile_flags_tainted_static_argnames():
     findings = _lint(_RECOMPILE_STATIC_BAD, "recompile-hazard")
     assert [(f.code, f.line) for f in findings] == [("RL005", 11)]
     assert "bound=" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# block-timer (RL006)
+# ---------------------------------------------------------------------------
+
+_TIMER_BAD = """\
+import time
+import jax
+
+def bench(fn, x):
+    t0 = time.perf_counter()
+    out = fn(x)
+    dt = time.perf_counter() - t0
+    t1 = time.monotonic()
+    fn(out)
+    print("warm")
+    return time.monotonic() - t1, dt
+"""
+
+_TIMER_GOOD = """\
+import time
+import jax
+
+def bench(fn, x):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(x))
+    dt = time.perf_counter() - t0
+    print("done", dt)
+    t1 = time.perf_counter()
+    emit("name", dt)
+    t2 = time.perf_counter()
+    return out, t2 - t1
+
+def helper(fn, x):
+    def inner(y):
+        return fn(y)
+    t0 = time.perf_counter()
+    res = fn(x)
+    res.block_until_ready()
+    return time.perf_counter() - t0
+"""
+
+
+def test_block_timer_flags_unblocked_intervals():
+    findings = _lint(_TIMER_BAD, "block-timer", rel="benchmarks/fix.py")
+    assert [(f.code, f.line) for f in findings] == [("RL006", 7), ("RL006", 11)]
+    assert "block_until_ready" in findings[0].message
+
+
+def test_block_timer_accepts_blocked_intervals_and_host_helpers():
+    # blocked work, host-only calls between reads, nested defs as
+    # separate timelines, and the .block_until_ready() method form
+    assert _lint(_TIMER_GOOD, "block-timer", rel="benchmarks/fix.py") == []
+
+
+def test_block_timer_scoped_to_benchmarks_dir():
+    assert _lint(_TIMER_BAD, "block-timer", rel="src/repro/core/x.py") == []
+    assert _lint(_TIMER_BAD, "block-timer", rel="tests/test_x.py") == []
+
+
+def test_block_timer_pragma_suppresses():
+    src = _TIMER_BAD.replace(
+        "    dt = time.perf_counter() - t0",
+        "    dt = time.perf_counter() - t0  # repro-lint: disable=block-timer",
+    )
+    findings = _lint(src, "block-timer", rel="benchmarks/fix.py")
+    assert [f.line for f in findings] == [11]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,473 @@
+"""Fault containment (`repro.serve`): quarantine + bisection, bounded
+retry, graceful degradation, convergence sentinels, and the
+deterministic `FaultPlan` harness. The acceptance bar: one poison in a
+K-request wave is isolated in at most ceil(log2 K) + 1 extra wave runs
+with the K-1 survivors bit-identical to solo; a forced round-bound hit
+raises ConvergenceError instead of returning wrong labels."""
+import math
+
+import numpy as np
+import pytest
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
+
+from repro.core import ConvergenceError
+from repro.data.graphs import graph_request_stream
+from repro.serve import (
+    FaultPlan,
+    GraphRequest,
+    GraphServeEngine,
+    InjectedEngineError,
+    SimulatedOOM,
+    TransientFault,
+    classify_failure,
+    is_resource_exhausted,
+)
+
+from test_serve_graph import _assert_matches_solo, _requests
+
+
+def _stream(k, seed=1, kind="cc"):
+    return graph_request_stream(k, kind=kind, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+
+
+def test_failure_classification():
+    assert classify_failure(TransientFault("x")) == "transient"
+    assert classify_failure(SimulatedOOM("x")) == "resource"
+    assert classify_failure(MemoryError("x")) == "resource"
+    assert classify_failure(RuntimeError("RESOURCE_EXHAUSTED: oom")) == (
+        "resource"
+    )
+    assert classify_failure(RuntimeError("ran out of memory on hbm")) == (
+        "resource"
+    )
+    assert classify_failure(InjectedEngineError("x")) == "poison"
+    assert classify_failure(ValueError("bad")) == "poison"
+    assert is_resource_exhausted(SimulatedOOM("x"))
+    assert not is_resource_exhausted(InjectedEngineError("x"))
+
+
+def test_fault_plan_random_is_deterministic():
+    uids = range(32)
+    a = FaultPlan.random(7, uids, p_poison=0.3, p_transient=0.3)
+    b = FaultPlan.random(7, uids, p_poison=0.3, p_transient=0.3)
+    assert a.poison_uids == b.poison_uids
+    assert a.transient_uids == b.transient_uids
+    c = FaultPlan.random(8, uids, p_poison=0.3, p_transient=0.3)
+    assert (a.poison_uids, a.transient_uids) != (
+        c.poison_uids, c.transient_uids
+    )
+
+
+# ---------------------------------------------------------------------------
+# poison bisection (the acceptance bound)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,poison", [(8, 3), (8, 0), (8, 7), (5, 2)])
+def test_poison_bisected_within_log_bound(k, poison):
+    """One poison in a K-request wave: isolated, survivors bit-exact vs
+    solo, and at most ceil(log2 K) + 1 extra wave runs."""
+    stream = _stream(k)
+    eng = GraphServeEngine(
+        max_requests=k, fault_plan=FaultPlan(poison_uids=frozenset([poison])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+
+    assert len(done) == k  # every request terminates
+    by_uid = {r.uid: r for r in done}
+    bad = by_uid[poison]
+    assert bad.failed and not bad.done and bad.result is None
+    assert "InjectedEngineError" in bad.error
+    for uid in range(k):
+        if uid == poison:
+            continue
+        assert not by_uid[uid].failed
+        _assert_matches_solo(by_uid[uid], stream[uid])
+
+    h = eng.health_records[-1]
+    extra = h.wave_runs - 1  # the doomed first wave is the baseline run
+    assert extra <= math.ceil(math.log2(k)) + 1, (
+        f"bisection used {extra} extra wave runs for K={k}"
+    )
+    assert h.quarantined == 1 and h.failed == 1 and h.completed == k - 1
+    assert h.bisections == 1 and h.retried == 0 and h.degraded == 0
+
+
+def test_two_poisons_both_isolated():
+    """Multi-poison waves recurse: the deferred siblings' re-run hunts
+    the second poison; every healthy request still completes."""
+    k = 8
+    stream = _stream(k, seed=3)
+    eng = GraphServeEngine(
+        max_requests=k, fault_plan=FaultPlan(poison_uids=frozenset([1, 6])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    by_uid = {r.uid: r for r in done}
+    assert len(done) == k
+    assert by_uid[1].failed and by_uid[6].failed
+    for uid in set(range(k)) - {1, 6}:
+        _assert_matches_solo(by_uid[uid], stream[uid])
+    h = eng.health_records[-1]
+    assert h.quarantined == 2 and h.bisections >= 2
+
+
+def test_poison_in_singleton_wave_quarantines_directly():
+    stream = _stream(3, seed=5)
+    eng = GraphServeEngine(
+        max_requests=1, fault_plan=FaultPlan(poison_uids=frozenset([1])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    h = eng.health_records[-1]
+    assert {r.uid for r in done if r.failed} == {1}
+    assert h.bisections == 0 and h.wave_runs == 3  # no probes needed
+
+
+def test_on_failure_raise_restores_fail_fast():
+    stream = _stream(4, seed=7)
+    eng = GraphServeEngine(
+        max_requests=4,
+        on_failure="raise",
+        fault_plan=FaultPlan(poison_uids=frozenset([2])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    with pytest.raises(InjectedEngineError):
+        eng.run()
+    with pytest.raises(ValueError, match="on_failure"):
+        GraphServeEngine(on_failure="ignore")
+
+
+# ---------------------------------------------------------------------------
+# transient retry
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_retried_in_place():
+    stream = _stream(4, seed=9)
+    eng = GraphServeEngine(
+        max_requests=4, max_retries=1,
+        fault_plan=FaultPlan(transient_uids={2: 1}),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert all(not r.failed for r in done)
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid])
+    h = eng.health_records[-1]
+    assert h.retried == 1 and h.quarantined == 0 and h.bisections == 0
+    assert h.wave_runs == 2  # one failure + one clean re-run
+
+
+def test_transient_beyond_retry_budget_is_quarantined():
+    """A 'transient' that outlives max_retries is treated like poison:
+    bisected and quarantined (here: singleton wave, direct)."""
+    stream = _stream(1, seed=11)
+    eng = GraphServeEngine(
+        max_requests=1, max_retries=1,
+        fault_plan=FaultPlan(transient_uids={0: 5}),
+    )
+    eng.submit(_requests(stream)[0])
+    done = eng.run()
+    assert done[0].failed and "TransientFault" in done[0].error
+    assert eng.health_records[-1].retried == 1  # budget, not the 5 failures
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation (simulated OOM)
+# ---------------------------------------------------------------------------
+
+
+def test_oom_degrades_bucket_and_completes_everything():
+    """An OOM on the packed bucket permanently caps the budget; the wave
+    re-packs into smaller waves and every request completes bit-exact."""
+    stream = _stream(8, seed=13)
+    probe = GraphServeEngine(max_requests=8)
+    reqs = _requests(stream)
+    node_cap, edge_cap = probe._wave_caps(reqs)
+
+    eng = GraphServeEngine(
+        max_requests=8,
+        fault_plan=FaultPlan(oom_node_caps=frozenset([node_cap])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 8 and all(not r.failed for r in done)
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid])
+    h = eng.health_records[-1]
+    assert h.degraded >= 1 and h.quarantined == 0
+    # the cap is permanent: the budget stays below the failing bucket
+    assert eng._node_budget <= node_cap // 2
+    assert all(w.node_cap < node_cap for w in eng.wave_records)
+
+
+def test_oom_on_singleton_wave_quarantines():
+    """A request that exhausts the device ALONE cannot degrade away --
+    it fails with the captured OOM."""
+    stream = _stream(1, seed=15)
+    eng = GraphServeEngine(max_requests=4)
+    caps = eng._wave_caps(_requests(stream))
+    eng.fault_plan = FaultPlan(oom_node_caps=frozenset([caps[0]]))
+    eng.submit(_requests(stream)[0])
+    done = eng.run()
+    assert done[0].failed and "SimulatedOOM" in done[0].error
+    assert eng.health_records[-1].degraded == 0
+
+
+def test_lm_engine_oom_halves_slots():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models.transformer import init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_arch("qwen3-4b").smoke_config
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(
+        params, cfg, num_slots=4, max_len=32,
+        fault_plan=FaultPlan(oom_slots_at=4),
+    )
+    solo = ServeEngine(params, cfg, num_slots=4, max_len=32)
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=[i + 1, i + 2], max_new_tokens=3))
+        solo.submit(Request(uid=i, prompt=[i + 1, i + 2], max_new_tokens=3))
+    done = eng.run()
+    assert eng.num_slots == 2  # permanently narrowed
+    assert len(done) == 4 and all(not r.failed for r in done)
+    ref = {r.uid: r.output for r in solo.run()}
+    assert {r.uid: r.output for r in done} == ref
+    assert eng.health_records[-1].degraded == 1
+
+
+# ---------------------------------------------------------------------------
+# convergence sentinels
+# ---------------------------------------------------------------------------
+
+
+def _path_graph(n):
+    src = np.arange(n - 1, dtype=np.int32)
+    return src, src + 1
+
+
+def test_shiloach_vishkin_convergence_error():
+    from repro.core import shiloach_vishkin
+
+    src, dst = _path_graph(64)
+    with pytest.raises(ConvergenceError, match="max_rounds"):
+        shiloach_vishkin(src, dst, 64, max_rounds=1)
+    labels, rounds = shiloach_vishkin(src, dst, 64)  # default bound: fine
+    assert int(rounds) >= 1
+
+
+def test_frontier_convergence_error():
+    from repro.core import frontier_shiloach_vishkin
+
+    src, dst = _path_graph(64)
+    with pytest.raises(ConvergenceError, match="round bound"):
+        frontier_shiloach_vishkin(src, dst, 64, max_rounds=1)
+
+
+def test_random_splitter_convergence_error():
+    from repro.core import random_splitter_rank
+    from repro.data.graphs import random_succ
+
+    succ = random_succ(256, seed=0)
+    with pytest.raises(ConvergenceError, match="max_steps"):
+        random_splitter_rank(succ, 4, seed=0, max_steps=1)
+    # an adequate budget still ranks exactly
+    r = random_splitter_rank(succ, 4, seed=0, max_steps=256)
+    assert r is not None
+
+
+def test_sharded_convergence_errors():
+    from repro.data.graphs import random_succ
+    from repro.distributed.graph import (
+        sharded_random_splitter_rank,
+        sharded_shiloach_vishkin,
+    )
+
+    src, dst = _path_graph(64)
+    with pytest.raises(ConvergenceError, match="max_rounds"):
+        sharded_shiloach_vishkin(src, dst, 64, max_rounds=1)
+    succ = random_succ(128, seed=1)
+    with pytest.raises(ConvergenceError, match="max_steps"):
+        sharded_random_splitter_rank(succ, 4, max_steps=1)
+
+
+def test_nonconvergence_injection_fails_only_that_wave():
+    """wants_nonconverge forces max_rounds=0 so the REAL core sentinel
+    fires; the wave's requests quarantine, later waves are untouched."""
+    stream = _stream(6, seed=17)
+    eng = GraphServeEngine(
+        max_requests=2,
+        fault_plan=FaultPlan(nonconverge_uids=frozenset([2])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    by_uid = {r.uid: r for r in done}
+    assert len(done) == 6
+    assert by_uid[2].failed and "ConvergenceError" in by_uid[2].error
+    for uid in set(range(6)) - {2}:
+        assert not by_uid[uid].failed
+        _assert_matches_solo(by_uid[uid], stream[uid])
+
+
+# ---------------------------------------------------------------------------
+# satellites: stale results, duplicate uids, malformed submits
+# ---------------------------------------------------------------------------
+
+
+def test_run_returns_only_new_results_graph():
+    """Regression: run() must not re-deliver an earlier run's results."""
+    stream = _stream(4, seed=19)
+    reqs = _requests(stream)
+    eng = GraphServeEngine(max_requests=2)
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    first = eng.run()
+    assert {r.uid for r in first} == {0, 1}
+    eng.submit(reqs[2])
+    eng.submit(reqs[3])
+    second = eng.run()
+    assert {r.uid for r in second} == {2, 3}, "stale results re-delivered"
+    assert eng.run() == []  # empty queue -> nothing new
+
+
+def test_run_returns_only_new_results_lm():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models.transformer import init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_arch("qwen3-4b").smoke_config
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, num_slots=2, max_len=32)
+    eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+    assert {r.uid for r in eng.run()} == {0}
+    # zero-budget requests register at submit and deliver on the NEXT run
+    eng.submit(Request(uid=1, prompt=[3], max_new_tokens=0))
+    eng.submit(Request(uid=2, prompt=[4, 5], max_new_tokens=2))
+    assert {r.uid for r in eng.run()} == {1, 2}
+    assert eng.run() == []
+
+
+def test_duplicate_uid_rejected_both_engines():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models.transformer import init_params
+    from repro.serve import Request, ServeEngine
+
+    stream = _stream(2, seed=21)
+    g = GraphServeEngine()
+    g.submit(GraphRequest(uid=0, **stream[0]))
+    with pytest.raises(ValueError, match="in flight"):
+        g.submit(GraphRequest(uid=0, **stream[1]))
+    g.run()
+    g.submit(GraphRequest(uid=0, **stream[1]))  # delivered uid is reusable
+
+    cfg = get_arch("qwen3-4b").smoke_config
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lm = ServeEngine(params, cfg, num_slots=2, max_len=32)
+    lm.submit(Request(uid=0, prompt=[1], max_new_tokens=1))
+    with pytest.raises(ValueError, match="in flight"):
+        lm.submit(Request(uid=0, prompt=[2], max_new_tokens=1))
+    with pytest.raises(ValueError, match="in flight"):
+        lm.submit(Request(uid=0, prompt=[2], max_new_tokens=0))
+    lm.run()
+    lm.submit(Request(uid=0, prompt=[2], max_new_tokens=1))
+
+
+def test_malformed_submit_rejected_before_any_wave():
+    stream = _stream(2, seed=23)
+    plan = FaultPlan(malformed_uids=frozenset([1]))
+    eng = GraphServeEngine(fault_plan=plan)
+    reqs = _requests(stream)
+    for r in reqs:
+        if r.uid in plan.malformed_uids:
+            plan.malform(r)
+            with pytest.raises(ValueError, match="endpoints"):
+                eng.submit(r)
+        else:
+            eng.submit(r)
+    done = eng.run()
+    assert {r.uid for r in done} == {0}  # the malformed one never entered
+    assert eng.health_records[-1].wave_runs == 1
+
+
+# ---------------------------------------------------------------------------
+# the chaos property
+# ---------------------------------------------------------------------------
+
+
+def _chaos_round(num_requests, seed, width):
+    """Random stream x random FaultPlan: every request terminates
+    exactly once (done xor failed) and every non-quarantined result is
+    bit-exact vs the solo engines."""
+    r = np.random.default_rng(seed)
+    stream = []
+    for _ in range(num_requests):
+        n = int(r.integers(1, 14))
+        m = int(r.integers(0, 4 * n))
+        stream.append({
+            "src": r.integers(0, n, m).astype(np.int32),
+            "dst": r.integers(0, n, m).astype(np.int32),
+            "num_nodes": n,
+            "kind": "analytics",
+        })
+    plan = FaultPlan.random(
+        seed, range(num_requests), p_poison=0.25, p_transient=0.25,
+        max_transient=2, p_nonconverge=0.1,
+    )
+    eng = GraphServeEngine(max_requests=width, max_retries=2,
+                           fault_plan=plan)
+    for req in _requests(stream):
+        eng.submit(req)
+    done = eng.run()
+
+    assert sorted(req.uid for req in done) == list(range(num_requests))
+    for req in done:
+        assert req.done != req.failed, f"uid={req.uid} not exactly-once"
+        if req.failed:
+            assert req.error and req.result is None
+        else:
+            _assert_matches_solo(req, stream[req.uid])
+    h = eng.health_records[-1]
+    assert h.completed + h.failed == num_requests
+    assert h.failed == h.quarantined
+    # poisons always quarantine; transient-only requests clear within
+    # the retry budget (max_retries=2 covers max_transient=2)
+    for uid in plan.poison_uids:
+        assert next(q for q in done if q.uid == uid).failed
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 7), st.integers(0, 10_000), st.integers(1, 4))
+def test_chaos_property_every_request_terminates_once(
+    num_requests, seed, width
+):
+    _chaos_round(num_requests, seed, width)
+
+
+@pytest.mark.parametrize("seed", [0, 101, 202])
+def test_chaos_deterministic_seeds(seed):
+    """The hypothesis property above skips without hypothesis; this
+    pins three deterministic chaos rounds so the containment paths run
+    in every environment (CI chaos-smoke)."""
+    _chaos_round(6, seed, 3)

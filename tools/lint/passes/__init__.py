@@ -4,6 +4,7 @@ from tools.lint.passes.scatter_determinism import ScatterDeterminismPass
 from tools.lint.passes.compat_shim import CompatShimPass
 from tools.lint.passes.choice_set import ChoiceSetPass
 from tools.lint.passes.recompile_hazard import RecompileHazardPass
+from tools.lint.passes.block_timer import BlockTimerPass
 
 ALL_PASSES = (
     HostSyncPass(),
@@ -11,6 +12,7 @@ ALL_PASSES = (
     CompatShimPass(),
     ChoiceSetPass(),
     RecompileHazardPass(),
+    BlockTimerPass(),
 )
 
 PASS_BY_NAME = {p.name: p for p in ALL_PASSES}

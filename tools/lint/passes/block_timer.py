@@ -1,0 +1,140 @@
+"""block-timer (RL006): benchmarks block on device work before timing.
+
+JAX dispatch is asynchronous: a ``fn(x)`` call returns as soon as the
+work is enqueued, so ``t0 = perf_counter(); fn(x); dt = perf_counter()
+- t0`` measures dispatch latency, not the kernel -- and un-blocked
+work launched BEFORE a timer read smears into the next measurement.
+Every benchmark in this repo therefore calls ``jax.block_until_ready``
+inside the timed interval (``benchmarks/common.time_fn`` is the
+canonical shape).
+
+The pass mechanizes that rule for ``benchmarks/``: within a function,
+for every pair of consecutive timer reads (``time.perf_counter`` /
+``time.monotonic`` / ``time.time`` and their ``_ns`` variants), if the
+interval between them contains any other call but no
+``block_until_ready``, the second read is flagged -- whatever ran in
+the interval may still be in flight when the clock is read.
+
+Scope notes (single-pass, name-based, like every repro-lint pass):
+
+* known host-only helpers (``print``/``emit``/``append``/``len``/...)
+  do not count as work, so the ``emit(...)`` line between two timed
+  loops does not force a spurious block;
+* nested ``def``/``lambda`` bodies are separate timelines (a closure's
+  calls run when IT runs, not between the enclosing reads);
+* a timer read inside a loop pairs with itself across iterations
+  (lexical order is the proxy), which is exactly the
+  ``for _: t0=read(); work; times.append(read()-t0)`` shape time_fn
+  uses -- the in-loop block satisfies both the lexical pair and the
+  wrap-around one.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint import astutil
+from tools.lint.core import LintPass, Module, Project
+
+TIMER_CALLS = frozenset(
+    {
+        "time.perf_counter",
+        "time.perf_counter_ns",
+        "time.monotonic",
+        "time.monotonic_ns",
+        "time.time",
+        "time.time_ns",
+        "perf_counter",
+        "perf_counter_ns",
+        "monotonic",
+        "monotonic_ns",
+    }
+)
+
+# Calls that never launch device work: flagging the interval between
+# two timed loops because it printed a result would be pure noise.
+HOST_ONLY = frozenset(
+    {
+        "print",
+        "emit",
+        "append",
+        "extend",
+        "len",
+        "range",
+        "int",
+        "float",
+        "str",
+        "format",
+        "median",
+        "mean",
+        "min",
+        "max",
+        "sum",
+        "sorted",
+        "join",
+        "flush",
+    }
+)
+
+
+def _events(fn: ast.AST):
+    """(kind, position, node) for every call lexically inside ``fn``,
+    skipping nested function/lambda bodies. kind is 'timer', 'block',
+    or 'work'."""
+    out = []
+
+    def visit(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                continue
+            if isinstance(child, ast.Call):
+                name = astutil.call_name(child) or ""
+                base = name.split(".")[-1]
+                pos = (child.lineno, child.col_offset)
+                if name in TIMER_CALLS:
+                    out.append(("timer", pos, child))
+                elif base == "block_until_ready":
+                    out.append(("block", pos, child))
+                elif base not in HOST_ONLY:
+                    out.append(("work", pos, child))
+            visit(child)
+
+    visit(fn)
+    out.sort(key=lambda e: e[1])
+    return out
+
+
+class BlockTimerPass(LintPass):
+    name = "block-timer"
+    code = "RL006"
+    guideline = "C-bench"
+    description = (
+        "benchmarks call jax.block_until_ready between consecutive "
+        "timer reads that bracket device work"
+    )
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("benchmarks/") and rel.endswith(".py")
+
+    def check_module(self, module: Module, project: Project):
+        for info in astutil.iter_functions(module.tree):
+            events = _events(info.node)
+            timers = [e for e in events if e[0] == "timer"]
+            for first, second in zip(timers, timers[1:]):
+                between = [
+                    e for e in events if first[1] < e[1] < second[1]
+                ]
+                if not any(e[0] == "work" for e in between):
+                    continue
+                if any(e[0] == "block" for e in between):
+                    continue
+                yield self.finding(
+                    module,
+                    second[2],
+                    f"timer read in `{info.name}` follows un-blocked "
+                    "work (async dispatch: the interval may still be "
+                    "executing); call jax.block_until_ready on the "
+                    "result inside the timed interval "
+                    "(benchmarks/common.time_fn is the pattern)",
+                )

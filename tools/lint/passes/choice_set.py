@@ -38,6 +38,7 @@ KNOBS = {
     "pack_mode": ("src/repro/core/list_ranking.py", "PACK_MODES"),
     "kind": ("src/repro/serve/graph.py", "KINDS"),
     "on_overflow": ("src/repro/serve/engine.py", "OVERFLOW_POLICIES"),
+    "on_failure": ("src/repro/serve/waves.py", "FAILURE_POLICIES"),
 }
 
 DOCS_REL = "docs/engines.md"

@@ -48,6 +48,7 @@ def run(n: int | None = None) -> list[str]:
                 f"cc_frontier/dense/{fam}/n={n}",
                 t_dense * 1e6,
                 f"rounds={int(rounds)};edges_touched={dense_visits}",
+                spread=(t_dense.p10 * 1e6, t_dense.p90 * 1e6),
             )
         )
         lines.append(
@@ -56,6 +57,7 @@ def run(n: int | None = None) -> list[str]:
                 t_front * 1e6,
                 f"rounds={st.rounds};edges_touched={st.edges_touched};"
                 f"visit_ratio={ratio:.2f};levels={len(st.levels)}",
+                spread=(t_front.p10 * 1e6, t_front.p90 * 1e6),
             )
         )
         _, _, sta = frontier_shiloach_vishkin(

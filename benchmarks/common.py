@@ -13,8 +13,26 @@ import numpy as np
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1"))
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds over `iters` calls (blocking on outputs)."""
+class TimingResult(float):
+    """Median wall seconds, carrying the run's spread.
+
+    A ``float`` subclass (the float value IS the median) so every
+    arithmetic call site -- ``t * 1e6``, ``t / n`` -- keeps working
+    unchanged; ``p10``/``p90`` ride along for ``emit(..., spread=)``.
+    """
+
+    __slots__ = ("p10", "p90")
+
+    def __new__(cls, median: float, p10: float, p90: float):
+        self = super().__new__(cls, median)
+        self.p10 = float(p10)
+        self.p90 = float(p90)
+        return self
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> TimingResult:
+    """Median wall seconds over `iters` calls (blocking on outputs),
+    as a ``TimingResult`` carrying the p10/p90 spread."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -22,10 +40,27 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    p10, p90 = np.percentile(times, [10, 90])
+    return TimingResult(float(np.median(times)), p10, p90)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> str:
+def emit(
+    name: str,
+    us_per_call: float,
+    derived: str = "",
+    spread: tuple[float, float] | None = None,
+) -> str:
+    """Print one ``name,us_per_call,derived`` CSV line.
+
+    ``spread`` appends the timing spread as ``~p10_us``/``~p90_us``
+    counters (values in microseconds, pre-scaled by the caller like
+    ``us_per_call`` itself). The ``~`` prefix marks them as wall-time:
+    ``benchmarks/run.py --check`` never compares ``~`` keys, so the
+    spread can ride in ``derived`` without breaking snapshot pinning.
+    """
+    if spread is not None:
+        frag = f"~p10_us={spread[0]:.1f};~p90_us={spread[1]:.1f}"
+        derived = f"{derived};{frag}" if derived else frag
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from benchmarks.common import SCALE, emit, time_fn
 from repro.data.graphs import graph_request_stream
+from repro.obs.metrics import derived_fragment
 from repro.serve import GraphRequest, GraphServeEngine
 
 
@@ -39,13 +40,17 @@ def run(num_requests: int | None = None) -> list[str]:
         stream = graph_request_stream(R, kind=kind, family=family, seed=11)
         t_batch = time_fn(lambda: _serve(stream, 16), iters=2)
         eng = _serve(stream, 16)
+        # legacy counters first (pinned bit-identical by --check), then
+        # the engine's unified metrics.snapshot() (repro.obs.metrics)
         lines.append(emit(
             f"graph_serve/batched/{kind}/{family}/req={R}",
             t_batch / R * 1e6,
             f"waves={eng.waves};req_per_wave={eng.requests_per_wave:.2f};"
             f"compiles={eng.bucket_compiles};"
             f"node_waste={eng.node_pad_waste:.3f};"
-            f"edge_waste={eng.edge_pad_waste:.3f}",
+            f"edge_waste={eng.edge_pad_waste:.3f};"
+            + derived_fragment(eng.metrics.snapshot()),
+            spread=(t_batch.p10 / R * 1e6, t_batch.p90 / R * 1e6),
         ))
         t_solo = time_fn(lambda: _serve(stream, 1), iters=2)
         solo = _serve(stream, 1)
@@ -53,6 +58,7 @@ def run(num_requests: int | None = None) -> list[str]:
             f"graph_serve/solo/{kind}/{family}/req={R}",
             t_solo / R * 1e6,
             f"waves={solo.waves};compiles={solo.bucket_compiles}",
+            spread=(t_solo.p10 / R * 1e6, t_solo.p90 / R * 1e6),
         ))
         print(
             f"# graph_serve {kind}/{family}: batched "

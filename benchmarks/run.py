@@ -42,14 +42,22 @@ def _parse_line(suite: str, line: str) -> dict:
 
 
 def _derived_counters(derived: str) -> dict:
-    """Numeric key=value pairs from a derived field ("a=1;b=2.5;c=x")."""
+    """Numeric key=value pairs from a derived field ("a=1;b=2.5;c=x").
+
+    Keys starting with ``~`` (wall-time spread: ``~p10_us``/``~p90_us``
+    from ``common.emit(..., spread=)``) are measurements, not
+    deterministic counters -- they are excluded, so --check never
+    compares them."""
     out = {}
     for part in derived.split(";"):
         if "=" not in part:
             continue
         k, v = part.split("=", 1)
+        k = k.strip()
+        if k.startswith("~"):
+            continue
         try:
-            out[k.strip()] = float(v)
+            out[k] = float(v)
         except ValueError:
             continue
     return out
@@ -70,20 +78,32 @@ def check_records(
             continue
         key = (rec["suite"], rec["name"])
         now = fresh_by_key.get(key)
+        where = f"{rec['suite']}/{rec['name']}"
         if now is None:
-            problems.append(f"{key[1]}: missing from fresh run")
+            problems.append(
+                f"{where}: record missing from fresh run"
+                f"\n  snapshot derived: {rec['derived']}"
+            )
             continue
         want = _derived_counters(rec["derived"])
         got = _derived_counters(now["derived"])
         for k, old in want.items():
             if k not in got:
-                problems.append(f"{key[1]}: counter {k} disappeared")
+                problems.append(
+                    f"{where}: counter {k} disappeared "
+                    f"(snapshot had {k}={old:g})"
+                    f"\n  snapshot derived: {rec['derived']}"
+                    f"\n  fresh    derived: {now['derived']}"
+                )
                 continue
             new = got[k]
             if abs(new - old) > tol * max(abs(old), 1.0):
+                rel = (new - old) / abs(old) if old else float("inf")
                 problems.append(
-                    f"{key[1]}: {k} moved {old:g} -> {new:g} "
-                    f"(tol {tol:.0%})"
+                    f"{where}: counter {k} expected {old:g}, got {new:g} "
+                    f"(rel delta {rel:+.2%}, tol {tol:.0%})"
+                    f"\n  snapshot derived: {rec['derived']}"
+                    f"\n  fresh    derived: {now['derived']}"
                 )
     return problems
 
@@ -104,10 +124,19 @@ def main(argv=None) -> None:
     ap.add_argument("--check-tol", type=float, default=0.05,
                     help="relative tolerance for --check counters "
                          "(default 0.05)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable repro.obs span tracing for the run and "
+                         "write a Chrome-trace JSON here (inspect with "
+                         "python -m repro.obs.summarize PATH)")
     args = ap.parse_args(argv)
 
     if args.smoke:  # must land before benchmarks.common reads the env
         os.environ["REPRO_BENCH_SCALE"] = SMOKE_SCALE
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.configure(trace="on")
 
     snapshot = None
     if args.check:
@@ -172,6 +201,16 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)
         print(f"# wrote {len(records)} records to {args.json}", flush=True)
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        n_events = obs_trace.export_chrome(args.trace)
+        print(
+            f"# wrote {n_events} trace events to {args.trace} "
+            "(chrome://tracing / Perfetto; summarize with "
+            f"python -m repro.obs.summarize {args.trace})",
+            flush=True,
+        )
     if snapshot is not None and not failures:
         ran = {name for name, _ in suites}
         problems = check_records(
@@ -179,7 +218,9 @@ def main(argv=None) -> None:
         )
         if problems:
             for p in problems:
-                print(f"# CHECK FAIL {p}", flush=True)
+                # continuation lines stay comment-prefixed so the
+                # output remains a valid CSV-with-comments stream
+                print("# CHECK FAIL " + p.replace("\n", "\n#"), flush=True)
             raise SystemExit(
                 f"--check {args.check}: {len(problems)} counter "
                 "regressions (see CHECK FAIL lines)"

@@ -24,6 +24,7 @@ import time
 
 from benchmarks.common import SCALE, emit
 from repro.data.graphs import graph_request_stream
+from repro.obs.metrics import derived_fragment
 from repro.serve import FaultPlan, GraphRequest, GraphServeEngine
 
 
@@ -78,13 +79,16 @@ def run(num_requests: int | None = None) -> list[str]:
     eng = _serve(stream, plan)
     t_chaos = time.perf_counter() - t0  # repro-lint: disable=block-timer
     h = eng.health_records[-1]
+    # legacy health counters first (pinned bit-identical by --check),
+    # then the engine's unified metrics.snapshot() (repro.obs.metrics)
     lines.append(emit(
         f"serve_chaos/faulty/req={R}",
         t_chaos / R * 1e6,
         f"completed={h.completed};failed={h.failed};"
         f"retried={h.retried};quarantined={h.quarantined};"
         f"degraded={h.degraded};bisections={h.bisections};"
-        f"wave_runs={h.wave_runs}",
+        f"wave_runs={h.wave_runs};"
+        + derived_fragment(eng.metrics.snapshot()),
     ))
     print(
         f"# serve_chaos: {h.failed}/{R} quarantined, "

@@ -50,6 +50,7 @@ def run(n: int | None = None) -> list[str]:
                 f"tree_ops/forest/{fam}/n={n}",
                 t_forest * 1e6,
                 f"trees={forest.num_trees};edges={forest.num_edges}",
+                spread=(t_forest.p10 * 1e6, t_forest.p90 * 1e6),
             )
         )
         cap = tour_capacity(forest.num_edges)
@@ -69,6 +70,7 @@ def run(n: int | None = None) -> list[str]:
                 f"tree_ops/tour/{fam}/n={n}",
                 t_tour * 1e6,
                 f"arcs={tour.num_arcs};capacity={tour.capacity}",
+                spread=(t_tour.p10 * 1e6, t_tour.p90 * 1e6),
             )
         )
         for engine in ("wylie", "splitter"):
@@ -85,6 +87,7 @@ def run(n: int | None = None) -> list[str]:
                     t_comp * 1e6,
                     f"max_depth={max_depth};size_sum={total_size};"
                     f"arcs={tour.num_arcs}",
+                    spread=(t_comp.p10 * 1e6, t_comp.p90 * 1e6),
                 )
             )
     return lines

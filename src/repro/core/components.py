@@ -438,16 +438,25 @@ def shiloach_vishkin(
     explicit too-small ``max_rounds`` or a broken round invariant.
     """
     from repro.compat import is_tracer
+    from repro.obs import trace
 
     n = num_nodes
     check_choice("hook_impl", hook_impl, HOOK_IMPLS)
     bound = max_rounds if max_rounds is not None else sv_round_bound(n)
     src, dst = _maybe_dedup(src, dst, dedup)
-    out = _sv_dense(
-        jnp.asarray(src), jnp.asarray(dst), n, bound, hook_impl,
-        record_hooks,
-    )
-    labels, rounds, converged = out[0], out[1], out[2]
+    # The whole-run device span blocks on the labels at close -- the
+    # same terminal sync the convergence-sentinel read below already
+    # pays, so tracing adds no new device round-trip. Under an outer
+    # jit trace nothing is registered to block on (tracer values), so
+    # the function stays traceable.
+    with trace.span("cc.dense", device=True, n=n, bound=bound) as sp:
+        out = _sv_dense(
+            jnp.asarray(src), jnp.asarray(dst), n, bound, hook_impl,
+            record_hooks,
+        )
+        labels, rounds, converged = out[0], out[1], out[2]
+        if not is_tracer(converged):
+            sp.block_on(labels)
     if not is_tracer(converged):
         # Intentional terminal sync: the sentinel must be read before
         # wrong labels can escape (docstring above).

@@ -53,6 +53,7 @@ from repro.core.components import (
     sv_round_bound,
     sv_round_fns,
 )
+from repro.obs import trace
 
 Array = jax.Array
 
@@ -77,6 +78,12 @@ class FrontierStats:
     sample_rounds: int = 0
     live_after_sample: int = 0  # frontier size after the pre-pass
     largest_component_frac: float = 0.0  # node share of the Afforest giant
+
+    def publish(self, registry=None, prefix: str = "cc.frontier") -> None:
+        """Publish into the metrics registry (``repro.obs.metrics``)."""
+        from repro.obs.metrics import publish_stats
+
+        publish_stats(self, prefix, registry)
 
 
 def next_pow2(x: int) -> int:
@@ -225,6 +232,8 @@ def frontier_shiloach_vishkin(
                           sample_rounds=sample_rounds)
 
     if sample_rounds > 0 and m2 > 0:
+        sample_sp = trace.span("cc.frontier.sample", k=sample_rounds)
+        sample_sp.__enter__()
         rng = np.random.default_rng(seed)
         perm = jnp.asarray(rng.permutation(m2).astype(np.int32))
         samples = _build_samples(a, b, perm, n=n, k=sample_rounds)
@@ -251,57 +260,68 @@ def frontier_shiloach_vishkin(
         size = min(m2, max(min_bucket, next_pow2(live)))
         a, b = compact_frontier(a, b, live_mask, size=size)
         m2_level = size
+        sample_sp.tag(live=live).__exit__(None, None, None)
     else:
         m2_level = m2
 
     force_converge = False
-    while True:
-        shrink_at = (
-            None if (m2_level <= min_bucket or force_converge)
-            else m2_level // 2
-        )
-        D, Q, aux, s, changed, fmask, rounds = _run_level(
-            a, b, D, Q, s, aux,
-            n=n, bound=bound, shrink_at=shrink_at, hook_impl=hook_impl,
-            record_hooks=record_hooks,
-        )
-        # SV2 + SV3 passes; the Pallas hook kernel doesn't export its
-        # compare mask, so that path pays a third (mask) pass per round.
-        passes = 2 if hook_impl == "xla" else 3
-        # Per-level host syncs, not per-round: _run_level keeps the inner
-        # SV iteration on device (lax.while_loop) and the host reads one
-        # round count / convergence flag / live count per LEVEL to drive
-        # the shrink ladder -- the paper's level-synchronous design.
-        stats.edges_touched += passes * int(rounds) * m2_level  # repro-lint: disable=host-sync
-        stats.levels.append((m2_level, int(rounds)))  # repro-lint: disable=host-sync
-        converged = not bool(changed)  # repro-lint: disable=host-sync
-        if converged or int(s) > bound:  # repro-lint: disable=host-sync
-            break
-        # Shrink: the masked frontier fits the next power-of-two bucket.
-        live = int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
-        new_size = max(min_bucket, next_pow2(live))
-        if new_size >= m2_level:  # can't shrink further: run to convergence
-            force_converge = True
-            continue
-        # The mask came out of this level's last SV3 pass; only the
-        # gather-write of the surviving edges into the new buffer is
-        # extra work.
-        stats.edges_touched += new_size
-        a, b = compact_frontier(a, b, fmask, size=new_size)
-        m2_level = new_size
+    # Spans attach at the per-LEVEL syncs the shrink ladder already pays
+    # (the int()/bool() reads below); tags reuse those reads, so tracing
+    # adds zero device round-trips (docs/observability.md).
+    with trace.span("cc.frontier", n=n, m2=m2) as run_sp:
+        while True:
+            shrink_at = (
+                None if (m2_level <= min_bucket or force_converge)
+                else m2_level // 2
+            )
+            with trace.span("cc.frontier.level", bucket=m2_level) as sp:
+                D, Q, aux, s, changed, fmask, rounds = _run_level(
+                    a, b, D, Q, s, aux,
+                    n=n, bound=bound, shrink_at=shrink_at,
+                    hook_impl=hook_impl, record_hooks=record_hooks,
+                )
+                # SV2 + SV3 passes; the Pallas hook kernel doesn't export
+                # its compare mask, so that path pays a third (mask) pass
+                # per round.
+                passes = 2 if hook_impl == "xla" else 3
+                # Per-level host syncs, not per-round: _run_level keeps
+                # the inner SV iteration on device (lax.while_loop) and
+                # the host reads one round count / convergence flag /
+                # live count per LEVEL to drive the shrink ladder -- the
+                # paper's level-synchronous design.
+                level_rounds = int(rounds)  # repro-lint: disable=host-sync
+                stats.edges_touched += passes * level_rounds * m2_level
+                stats.levels.append((m2_level, level_rounds))
+                converged = not bool(changed)  # repro-lint: disable=host-sync
+                sp.tag(rounds=level_rounds, converged=converged)
+            if converged or int(s) > bound:  # repro-lint: disable=host-sync
+                break
+            # Shrink: the masked frontier fits the next power-of-two bucket.
+            live = int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
+            new_size = max(min_bucket, next_pow2(live))
+            if new_size >= m2_level:  # can't shrink: run to convergence
+                force_converge = True
+                continue
+            # The mask came out of this level's last SV3 pass; only the
+            # gather-write of the surviving edges into the new buffer is
+            # extra work.
+            stats.edges_touched += new_size
+            a, b = compact_frontier(a, b, fmask, size=new_size)
+            m2_level = new_size
 
-    if not converged:
-        # The level loop ran out of round budget with hooks still
-        # flowing: labels would be wrong, so fail loudly (the
-        # convergence sentinel; see core.components.ConvergenceError).
-        raise ConvergenceError(
-            f"frontier_shiloach_vishkin hit its round bound ({bound}"
-            f"{f', incl. {sample_rounds} sampling rounds' if sample_rounds else ''})"
-            f" before the label fixpoint on {n} nodes; raise max_rounds"
-        )
-    D = sv_compress(D, n)
-    # Terminal readback: the loop above already synced on s every level.
-    rounds_total = int(s) - 1  # repro-lint: disable=host-sync
+        if not converged:
+            # The level loop ran out of round budget with hooks still
+            # flowing: labels would be wrong, so fail loudly (the
+            # convergence sentinel; see core.components.ConvergenceError).
+            raise ConvergenceError(
+                f"frontier_shiloach_vishkin hit its round bound ({bound}"
+                f"{f', incl. {sample_rounds} sampling rounds' if sample_rounds else ''})"
+                f" before the label fixpoint on {n} nodes; raise max_rounds"
+            )
+        D = sv_compress(D, n)
+        # Terminal readback: the loop above already synced on s per level.
+        rounds_total = int(s) - 1  # repro-lint: disable=host-sync
+        run_sp.tag(rounds=rounds_total, levels=len(stats.levels))
     stats.rounds = rounds_total
     out = (D, jnp.int32(rounds_total))
     if record_hooks:

@@ -104,6 +104,12 @@ class SplitterStats:
     walk_steps: int  # lockstep trip count = max sub-list length
     expected_mean: float  # n / p (Table 3 "Mean")
 
+    def publish(self, registry=None, prefix: str = "rank.splitter") -> None:
+        """Publish into the metrics registry (``repro.obs.metrics``)."""
+        from repro.obs.metrics import publish_stats
+
+        publish_stats(self, prefix, registry)
+
 
 def select_splitters(n: int, p: int, seed: int = 0, head: int = 0) -> np.ndarray:
     """RS2: one KISS stream per lane picks a splitter in its n/p block.

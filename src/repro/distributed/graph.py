@@ -82,6 +82,7 @@ from repro.core.list_ranking import (
     select_splitters,
 )
 from repro.core.pram import lockstep_walk
+from repro.obs import trace
 
 Array = jax.Array
 
@@ -278,6 +279,12 @@ class CCExchangeStats:
     exchange: str
     capacity: int | None
 
+    def publish(self, registry=None, prefix: str = "cc.sharded") -> None:
+        """Publish into the metrics registry (``repro.obs.metrics``)."""
+        from repro.obs.metrics import publish_stats
+
+        publish_stats(self, prefix, registry)
+
 
 def default_sparse_capacity(num_nodes: int) -> int:
     """Per-device (index, label) buffer: n/8 keeps a no-overflow round's
@@ -330,17 +337,26 @@ def sharded_shiloach_vishkin(
         sparse_capacity if sparse_capacity is not None
         else default_sparse_capacity(num_nodes)
     )
-    res = _sharded_sv(
-        a, b, num_nodes=num_nodes, max_rounds=max_rounds, mesh=mesh,
-        axis=axis, exchange=exchange, capacity=capacity,
-        record_hooks=record_hooks,
-    )
-    if record_hooks:
-        labels, rounds, converged, hooks, (words, frontier) = res
-        out = (labels, rounds, hooks)
-    else:
-        labels, rounds, converged, (words, frontier) = res
-        out = (labels, rounds)
+    # Whole-run device span: blocks on the replicated labels at close,
+    # the sync the sentinel read below pays anyway; nothing registers
+    # under an outer jit trace, so the engine stays traceable.
+    with trace.span(
+        "cc.sharded", device=True, n=num_nodes, devices=nd,
+        exchange=exchange,
+    ) as sp:
+        res = _sharded_sv(
+            a, b, num_nodes=num_nodes, max_rounds=max_rounds, mesh=mesh,
+            axis=axis, exchange=exchange, capacity=capacity,
+            record_hooks=record_hooks,
+        )
+        if record_hooks:
+            labels, rounds, converged, hooks, (words, frontier) = res
+            out = (labels, rounds, hooks)
+        else:
+            labels, rounds, converged, (words, frontier) = res
+            out = (labels, rounds)
+        if not is_tracer(converged):
+            sp.block_on(labels)
     if not is_tracer(converged):
         # Intentional terminal sync: the fixpoint sentinel must be read
         # before wrong labels can escape (labels are replicated, so the
@@ -504,6 +520,14 @@ class ShardedFrontierStats:
     words_per_round: np.ndarray | None = None
     frontier_per_round: np.ndarray | None = None
 
+    def publish(
+        self, registry=None, prefix: str = "cc.sharded_frontier"
+    ) -> None:
+        """Publish into the metrics registry (``repro.obs.metrics``)."""
+        from repro.obs.metrics import publish_stats
+
+        publish_stats(self, prefix, registry)
+
 
 def frontier_sparse_capacity(
     num_nodes: int, bucket: int, user_capacity: int | None = None
@@ -594,60 +618,77 @@ def sharded_frontier_shiloach_vishkin(
     )
 
     force_converge = False
-    while True:
-        capacity = (
-            frontier_sparse_capacity(n, bucket, sparse_capacity)
-            if exchange == "sparse" else 0
-        )
-        if exchange == "sparse":
-            stats.capacities.append(capacity)
-        shrink_at = (
-            None if (bucket <= min_bucket or force_converge)
-            else bucket // 2
-        )
-        D, Q, aux, s, changed, fmask, live_max, rounds = (
-            _sharded_frontier_level(
-                a, b, D, Q, aux, s,
-                num_nodes=n, bound=bound, shrink_at=shrink_at, mesh=mesh,
-                axis=axis, exchange=exchange, capacity=capacity,
-                hook_impl=hook_impl, record_hooks=record_hooks,
+    # Spans attach at the per-LEVEL syncs the shared shrink ladder
+    # already pays; tags reuse those reads (docs/observability.md).
+    with trace.span(
+        "cc.sharded_frontier", n=n, m2=m2, devices=nd, exchange=exchange,
+    ) as run_sp:
+        while True:
+            capacity = (
+                frontier_sparse_capacity(n, bucket, sparse_capacity)
+                if exchange == "sparse" else 0
             )
-        )
-        # Per-device visit accounting mirrors the single-device engine:
-        # SV2 + SV3 passes over the local bucket (the Pallas hook kernel
-        # pays a third, mask, pass), plus the compaction write below.
-        passes = 2 if hook_impl == "xla" else 3
-        # Per-level host syncs (not per-round): the inner SV iteration
-        # stays on device and the host reads one round count /
-        # convergence flag / live max per LEVEL to drive the shared
-        # shrink ladder -- same level-synchronous design as frontier.py.
-        stats.edges_touched += passes * int(rounds) * bucket  # repro-lint: disable=host-sync
-        stats.levels.append((bucket, int(rounds)))  # repro-lint: disable=host-sync
-        converged = not bool(changed)  # repro-lint: disable=host-sync
-        if converged or int(s) > bound:  # repro-lint: disable=host-sync
-            break
-        # Shrink: every shard drops to the power-of-two bucket covering
-        # the LARGEST per-device live count (one shared compiled shape).
-        new_bucket = max(min_bucket, next_pow2(int(live_max)))  # repro-lint: disable=host-sync
-        if new_bucket >= bucket:  # can't shrink further: run to convergence
-            force_converge = True
-            continue
-        stats.edges_touched += new_bucket
-        a, b = _sharded_compact(
-            a, b, fmask, size=new_bucket, mesh=mesh, axis=axis
-        )
-        bucket = new_bucket
+            if exchange == "sparse":
+                stats.capacities.append(capacity)
+            shrink_at = (
+                None if (bucket <= min_bucket or force_converge)
+                else bucket // 2
+            )
+            with trace.span(
+                "cc.sharded_frontier.level", bucket=bucket,
+                capacity=capacity,
+            ) as sp:
+                D, Q, aux, s, changed, fmask, live_max, rounds = (
+                    _sharded_frontier_level(
+                        a, b, D, Q, aux, s,
+                        num_nodes=n, bound=bound, shrink_at=shrink_at,
+                        mesh=mesh, axis=axis, exchange=exchange,
+                        capacity=capacity, hook_impl=hook_impl,
+                        record_hooks=record_hooks,
+                    )
+                )
+                # Per-device visit accounting mirrors the single-device
+                # engine: SV2 + SV3 passes over the local bucket (the
+                # Pallas hook kernel pays a third, mask, pass), plus the
+                # compaction write below.
+                passes = 2 if hook_impl == "xla" else 3
+                # Per-level host syncs (not per-round): the inner SV
+                # iteration stays on device and the host reads one round
+                # count / convergence flag / live max per LEVEL to drive
+                # the shared shrink ladder -- same level-synchronous
+                # design as frontier.py.
+                level_rounds = int(rounds)  # repro-lint: disable=host-sync
+                stats.edges_touched += passes * level_rounds * bucket
+                stats.levels.append((bucket, level_rounds))
+                converged = not bool(changed)  # repro-lint: disable=host-sync
+                sp.tag(rounds=level_rounds, converged=converged)
+            if converged or int(s) > bound:  # repro-lint: disable=host-sync
+                break
+            # Shrink: every shard drops to the power-of-two bucket
+            # covering the LARGEST per-device live count (one shared
+            # compiled shape).
+            new_bucket = max(min_bucket, next_pow2(int(live_max)))  # repro-lint: disable=host-sync
+            if new_bucket >= bucket:  # can't shrink: run to convergence
+                force_converge = True
+                continue
+            stats.edges_touched += new_bucket
+            a, b = _sharded_compact(
+                a, b, fmask, size=new_bucket, mesh=mesh, axis=axis
+            )
+            bucket = new_bucket
 
-    if not converged:
-        raise ConvergenceError(
-            f"sharded frontier SV hit its round bound ({bound}) before the"
-            f" label fixpoint on {n} nodes across {nd} devices; the labels"
-            " at the bound are NOT components -- raise max_rounds (the"
-            f" proven bound is sv_round_bound(n)={sv_round_bound(n)})"
-        )
-    D = sv_compress(D, n)
-    # Terminal readback: the loop above already synced on s every level.
-    rounds_total = int(s) - 1  # repro-lint: disable=host-sync
+        if not converged:
+            raise ConvergenceError(
+                f"sharded frontier SV hit its round bound ({bound}) before"
+                f" the label fixpoint on {n} nodes across {nd} devices; the"
+                " labels at the bound are NOT components -- raise"
+                " max_rounds (the proven bound is sv_round_bound(n)="
+                f"{sv_round_bound(n)})"
+            )
+        D = sv_compress(D, n)
+        # Terminal readback: the loop above already synced on s per level.
+        rounds_total = int(s) - 1  # repro-lint: disable=host-sync
+        run_sp.tag(rounds=rounds_total, levels=len(stats.levels))
     stats.rounds = rounds_total
     out = (D, jnp.int32(rounds_total))
     if record_hooks:
@@ -824,19 +865,24 @@ def sharded_random_splitter_rank(
     pp = max(-(-p // nd) * nd, nd)  # lane padding (masked inert)
     npad = max(-(-n // nd) * nd, nd)  # node padding for the RS5 out shard
     spl_pad = _pad_to(jnp.asarray(splitters, jnp.int32), pp, 0)
-    rank_pad, sublens, steps, converged = _sharded_rs(
-        succ,
-        spl_pad,
-        n=n,
-        p=p,
-        pp=pp,
-        npad=npad,
-        max_steps=max_steps,
-        mesh=mesh,
-        axis=axis,
-        kernel_impl=kernel_impl,
-    )
-    rank = rank_pad[:n]
+    with trace.span(
+        "rank.splitter.sharded", device=True, n=n, p=p, devices=nd,
+    ) as sp:
+        rank_pad, sublens, steps, converged = _sharded_rs(
+            succ,
+            spl_pad,
+            n=n,
+            p=p,
+            pp=pp,
+            npad=npad,
+            max_steps=max_steps,
+            mesh=mesh,
+            axis=axis,
+            kernel_impl=kernel_impl,
+        )
+        rank = rank_pad[:n]
+        if not is_tracer(converged):
+            sp.block_on(rank)
     if max_steps is not None and not is_tracer(converged):
         # Host-driven callers get the fixpoint guarantee; a traced
         # caller cannot raise on a device value and keeps the

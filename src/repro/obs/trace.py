@@ -1,0 +1,277 @@
+"""Host-side span tracer for the level-synchronous engines.
+
+The repo's engines are host-driven by design: a level loop (frontier
+buckets), an exchange round, or a serve wave runs on device, the host
+syncs once to read the live count / convergence flag / unpacked
+results, and decides the next compiled shape. Those syncs are exactly
+the timeline the ROADMAP wants to see (it suspects per-level host
+round-trips dominate small-n frontier wall-clock) -- so this tracer
+attaches spans ONLY at boundaries that already sync and never adds a
+device->host read of its own (RL001 stays clean by construction).
+
+Usage::
+
+    from repro.obs import trace
+
+    trace.configure(trace="on")            # or REPRO_TRACE=1
+    with trace.span("cc.frontier.level", bucket=4096) as sp:
+        ...                                # host-driven work
+        sp.tag(rounds=int(rounds))         # values the host ALREADY read
+    trace.event("serve.quarantine", uid=7) # instant marker
+    trace.export_chrome("trace.json")      # Chrome/Perfetto timeline
+
+* **Disabled is free.** ``span()`` returns one shared ``_NULL_SPAN``
+  singleton when tracing is off -- no allocation, no clock read, no
+  list append -- so instrumented hot loops cost nothing by default.
+* **Device spans.** ``span(..., device=True)`` calls
+  ``jax.block_until_ready`` at close on the value registered via
+  ``sp.block_on(x)`` -- the RL006 block-timer discipline, applied at
+  close so the span's duration covers the device work it launched.
+  Tracer values pass through ``block_until_ready`` untouched, so
+  instrumented functions stay safely traceable under ``jax.jit``.
+* **Timer spans.** ``span(..., timer=True)`` returns a real timing
+  span even when tracing is disabled (it times and blocks but records
+  nothing): callers that need the duration regardless -- the training
+  loop's straggler watchdog -- read ``sp.duration`` after the block.
+* **Profiler interplay.** ``span(..., profile=True)`` wraps the span
+  in ``jax.profiler.TraceAnnotation`` when the global ``profile``
+  knob is ``"on"``, so host spans line up with device traces in a
+  ``jax.profiler`` capture. Off by default: annotations are cheap but
+  not free, and only useful under an active profiler session.
+
+Exported Chrome-trace JSON (``{"traceEvents": [...]}``, complete
+events ``ph="X"``, instants ``ph="i"``, microsecond timestamps) loads
+directly in ``chrome://tracing`` / Perfetto; ``python -m
+repro.obs.summarize trace.json`` prints the per-phase aggregate table.
+
+This module imports nothing from ``repro`` at module level (the
+engines it instruments import it), and never imports ``jax`` unless a
+device span actually has something to block on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+# The RL004 choice sets for the tracing knobs (docs/engines.md matrix;
+# registered in tools/lint/passes/choice_set.py KNOBS).
+TRACE_MODES = ("off", "on")
+PROFILE_MODES = ("off", "on")
+
+
+class _NullSpan:
+    """The shared disabled-path span: every method is a no-op and
+    ``span()`` hands out the one module singleton, so a disabled
+    tracer allocates nothing per span."""
+
+    __slots__ = ()
+    duration = 0.0
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def tag(self, **attrs):
+        return self
+
+    def block_on(self, value):
+        return value
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Span:
+    """One live span. Use as a context manager; see module docstring."""
+
+    __slots__ = (
+        "_tracer", "name", "attrs", "device", "profile", "_blockee",
+        "_ann", "_t0", "duration",
+    )
+
+    def __init__(self, tracer, name, attrs, device, profile):
+        self._tracer = tracer  # None: timer-only span (tracing disabled)
+        self.name = name
+        self.attrs = attrs
+        self.device = device
+        self.profile = profile
+        self._blockee = None
+        self._ann = None
+        self._t0 = 0
+        self.duration = 0.0
+
+    def tag(self, **attrs) -> "Span":
+        """Attach attributes the host has ALREADY read (round counts,
+        live sizes, failure classes) -- never pass a device value."""
+        self.attrs.update(attrs)
+        return self
+
+    def block_on(self, value):
+        """Register the device value this span's close blocks on
+        (``device=True`` spans only). Returns ``value`` unchanged."""
+        self._blockee = value
+        return value
+
+    def __enter__(self):
+        if self.profile and self._tracer is not None:
+            from jax.profiler import TraceAnnotation
+
+            self._ann = TraceAnnotation(self.name)
+            self._ann.__enter__()
+        self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if self.device and self._blockee is not None:
+            import jax
+
+            jax.block_until_ready(self._blockee)
+        end = time.perf_counter_ns()
+        self.duration = (end - self._t0) * 1e-9
+        if self._ann is not None:
+            self._ann.__exit__(exc_type, exc, tb)
+        if self._tracer is not None:
+            if exc_type is not None:
+                self.attrs.setdefault("exception", exc_type.__name__)
+            self._tracer._record(self.name, self._t0, end, self.attrs)
+        return False
+
+
+class Tracer:
+    """Span/event collector. The module-level functions drive one
+    process-global instance; tests may build their own."""
+
+    def __init__(self, *, trace: str = "off", profile: str = "off"):
+        self.events: list[dict] = []
+        self._origin = time.perf_counter_ns()
+        self._pid = os.getpid()
+        self.configure(trace=trace, profile=profile)
+
+    # -- knobs ---------------------------------------------------------
+    def configure(
+        self, *, trace: str | None = None, profile: str | None = None
+    ) -> None:
+        """Set the ``trace=`` / ``profile=`` modes (``docs/engines.md``
+        matrix; unknown strings raise like every other dispatch knob)."""
+        # check_choice imports lazily, and only to raise: the engines
+        # this module instruments import it, so a module-level (or
+        # valid-path) import of repro.core here would be a cycle.
+        if trace is not None:
+            if trace not in TRACE_MODES:
+                from repro.core.components import check_choice
+
+                check_choice("trace", trace, TRACE_MODES)
+            self.trace = trace
+        if profile is not None:
+            if profile not in PROFILE_MODES:
+                from repro.core.components import check_choice
+
+                check_choice("profile", profile, PROFILE_MODES)
+            self.profile = profile
+
+    @property
+    def enabled(self) -> bool:
+        return self.trace == "on"
+
+    def reset(self) -> None:
+        """Drop recorded events (fresh timeline, same knobs)."""
+        self.events = []
+        self._origin = time.perf_counter_ns()
+
+    # -- recording -----------------------------------------------------
+    def span(
+        self,
+        name: str,
+        *,
+        device: bool = False,
+        profile: bool = False,
+        timer: bool = False,
+        **attrs,
+    ):
+        """A context-managed span. Disabled tracing returns the no-op
+        singleton unless ``timer=True`` (see module docstring)."""
+        if not self.enabled:
+            if not timer:
+                return _NULL_SPAN
+            return Span(None, name, attrs, device, False)
+        return Span(
+            self, name, attrs, device,
+            profile and self.profile == "on",
+        )
+
+    def event(self, name: str, **attrs) -> None:
+        """An instant marker (Chrome-trace ``ph="i"``)."""
+        if not self.enabled:
+            return
+        now = time.perf_counter_ns()
+        self.events.append({
+            "name": name, "ph": "i", "s": "t",
+            "ts": (now - self._origin) / 1e3,
+            "pid": self._pid, "tid": threading.get_ident(),
+            "args": attrs,
+        })
+
+    def _record(self, name, t0_ns, end_ns, attrs) -> None:
+        self.events.append({
+            "name": name, "ph": "X",
+            "ts": (t0_ns - self._origin) / 1e3,  # Chrome wants microseconds
+            "dur": (end_ns - t0_ns) / 1e3,
+            "pid": self._pid, "tid": threading.get_ident(),
+            "args": attrs,
+        })
+
+    # -- export --------------------------------------------------------
+    def chrome_trace(self) -> dict:
+        """The Chrome-trace/Perfetto JSON object."""
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path: str) -> int:
+        """Write the timeline as Chrome-trace JSON; returns the number
+        of events written (loads in chrome://tracing / Perfetto)."""
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f, indent=1, default=str)
+        return len(self.events)
+
+
+# The process-global tracer the engines record into. REPRO_TRACE=1 (or
+# "on") enables tracing from the environment -- the benchmark / CI
+# hook; REPRO_PROFILE=1 additionally arms TraceAnnotation wrapping.
+_ON = ("1", "on", "true", "yes")
+_GLOBAL = Tracer(
+    trace="on" if os.environ.get("REPRO_TRACE", "").lower() in _ON else "off",
+    profile=(
+        "on" if os.environ.get("REPRO_PROFILE", "").lower() in _ON else "off"
+    ),
+)
+
+
+def configure(*, trace: str | None = None, profile: str | None = None):
+    _GLOBAL.configure(trace=trace, profile=profile)
+
+
+def enabled() -> bool:
+    return _GLOBAL.enabled
+
+
+def reset() -> None:
+    _GLOBAL.reset()
+
+
+# Bound-method aliases, not wrapper defs: the disabled path must stay
+# near-free in the engines' hot loops, and a wrapper would pay a second
+# call frame + kwargs packing per span. _GLOBAL is never reassigned
+# (configure mutates it), so the bindings cannot go stale.
+span = _GLOBAL.span
+event = _GLOBAL.event
+
+
+def chrome_trace() -> dict:
+    return _GLOBAL.chrome_trace()
+
+
+def export_chrome(path: str) -> int:
+    return _GLOBAL.export_chrome(path)

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.components import check_choice
 from repro.models.transformer import init_kv_cache, serve_step
+from repro.obs import trace
 from repro.serve.waves import WaveScheduler
 
 Array = jax.Array
@@ -135,39 +136,52 @@ class ServeEngine(WaveScheduler):
         pending = [list(r.prompt) for r in wave]
         active = [True] * len(wave)
         pos = 0
-        while any(active) and pos < self.max_len:
-            tokens = np.zeros((self.num_slots, 1), np.int32)
-            for s, r in enumerate(wave):
-                if pending[s]:
-                    tokens[s, 0] = pending[s][0]
-                elif r.output:
-                    tokens[s, 0] = r.output[-1]
-                else:
-                    tokens[s, 0] = r.prompt[-1]
-            logits, cache = self._step(
-                self.params, cache, jnp.asarray(tokens), jnp.int32(pos)
-            )
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-            for s, r in enumerate(wave):
-                if not active[s]:
-                    continue
-                if pending[s]:
-                    pending[s].pop(0)
+        # One span per wave, not per token: the lockstep loop already
+        # syncs every step (np.asarray on the logits), so a span per
+        # token would add trace events, not information.
+        with trace.span(
+            "serve.wave.decode", requests=len(wave), slots=self.num_slots,
+        ) as sp:
+            while any(active) and pos < self.max_len:
+                tokens = np.zeros((self.num_slots, 1), np.int32)
+                for s, r in enumerate(wave):
                     if pending[s]:
-                        continue  # still prefilling; prediction unused
-                tok = int(nxt[s])
-                r.output.append(tok)
-                if (
-                    len(r.output) >= r.max_new_tokens
-                    or (r.eos_id is not None and tok == r.eos_id)
-                    # continuing needs row pos + 1 for the fed-back token:
-                    # retire only once that row would fall off the cache,
-                    # so the final row is usable like any other.
-                    or pos + 2 > self.max_len
-                ):
-                    r.done = True
-                    active[s] = False
-            pos += 1
+                        tokens[s, 0] = pending[s][0]
+                    elif r.output:
+                        tokens[s, 0] = r.output[-1]
+                    else:
+                        tokens[s, 0] = r.prompt[-1]
+                logits, cache = self._step(
+                    self.params, cache, jnp.asarray(tokens), jnp.int32(pos)
+                )
+                nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+                for s, r in enumerate(wave):
+                    if not active[s]:
+                        continue
+                    if pending[s]:
+                        pending[s].pop(0)
+                        if pending[s]:
+                            continue  # still prefilling; prediction unused
+                    tok = int(nxt[s])
+                    r.output.append(tok)
+                    if (
+                        len(r.output) >= r.max_new_tokens
+                        or (r.eos_id is not None and tok == r.eos_id)
+                        # continuing needs row pos + 1 for the fed-back
+                        # token: retire only once that row would fall off
+                        # the cache, so the final row is usable like any
+                        # other.
+                        or pos + 2 > self.max_len
+                    ):
+                        r.done = True
+                        active[s] = False
+                pos += 1
+            sp.tag(steps=pos)
+        self.metrics.inc("serve.lm.waves")
+        self.metrics.inc("serve.lm.steps", pos)
+        self.metrics.inc(
+            "serve.lm.tokens", sum(len(r.output) for r in wave)
+        )
 
     def run(self) -> list[Request]:
         """Process the whole queue; returns the requests that reached a

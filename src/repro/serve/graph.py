@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core.components import check_choice
 from repro.core.frontier import next_pow2
+from repro.obs import trace
 from repro.serve.waves import WaveScheduler
 
 # Request kinds, in pipeline-stage order: each stage subsumes the ones
@@ -118,6 +119,17 @@ class WaveRecord:
     edge_cap: int
     new_bucket: bool  # first wave in this (stage, node_cap, edge_cap)
     rounds: int  # SV rounds of the union run (max over members)
+
+    def publish(
+        self, registry=None, prefix: str = "serve.graph.wave"
+    ) -> None:
+        """Publish into the metrics registry (``repro.obs.metrics``):
+        counters accumulate across waves, so ``.requests`` is the
+        engine's served-request total and ``.new_bucket`` its bucket
+        compiles."""
+        from repro.obs.metrics import publish_stats
+
+        publish_stats(self, prefix, registry)
 
 
 class GraphServeEngine(WaveScheduler):
@@ -326,7 +338,7 @@ class GraphServeEngine(WaveScheduler):
         return subs
 
     def _run_wave(self, wave: list[GraphRequest]):
-        from repro.core import connected_components, num_components
+        from repro.core import connected_components
         from repro.trees import spanning_forest, tree_analytics
 
         if self.fault_plan is not None:
@@ -340,13 +352,17 @@ class GraphServeEngine(WaveScheduler):
         edge_cap = max(self.min_edges, next_pow2(max(m_union, 1)))
         if self.fault_plan is not None:
             self.fault_plan.check_bucket(node_cap)
-        src = np.zeros((edge_cap,), np.int32)  # pad: inert (0,0) self-loops
-        dst = np.zeros((edge_cap,), np.int32)
-        eo = 0
-        for r, o in zip(wave, node_off):
-            src[eo:eo + r.num_edges] = r.src + o
-            dst[eo:eo + r.num_edges] = r.dst + o
-            eo += r.num_edges
+        with trace.span(
+            "serve.wave.pack", requests=len(wave), stage=stage,
+            node_cap=node_cap, edge_cap=edge_cap,
+        ):
+            src = np.zeros((edge_cap,), np.int32)  # pad: inert self-loops
+            dst = np.zeros((edge_cap,), np.int32)
+            eo = 0
+            for r, o in zip(wave, node_off):
+                src[eo:eo + r.num_edges] = r.src + o
+                dst[eo:eo + r.num_edges] = r.dst + o
+                eo += r.num_edges
 
         bucket = (stage, node_cap, edge_cap)
         new_bucket = bucket not in self._buckets
@@ -361,33 +377,68 @@ class GraphServeEngine(WaveScheduler):
             # Remove the round budget so the core engines' REAL
             # ConvergenceError sentinel fires for this wave.
             kw["max_rounds"] = 0
-        ta = None
-        if stage == "cc":
-            labels, rounds = connected_components(src, dst, node_cap, **kw)
+        # The engine span covers the batched device program AND the
+        # np.asarray materializations -- those reads are the wave's
+        # existing host sync, so the span closes on an already-synced
+        # boundary (no block_on needed).
+        with trace.span(
+            "serve.wave.engine", stage=stage, requests=len(wave),
+            node_cap=node_cap, edge_cap=edge_cap, new_bucket=new_bucket,
+        ) as esp:
+            extras = None
+            if stage == "cc":
+                labels, rounds = connected_components(
+                    src, dst, node_cap, **kw
+                )
+                labels = np.asarray(labels)
+                edge_u = edge_v = None
+            elif stage == "forest":
+                forest = spanning_forest(src, dst, node_cap, **kw)
+                labels, rounds = forest.labels, forest.rounds
+                edge_u, edge_v = forest.edge_u, forest.edge_v
+            else:
+                ta = tree_analytics(
+                    src, dst, node_cap,
+                    rank_engine=self.rank_engine,
+                    kernel_impl=self.kernel_impl,
+                    num_splitters=self.num_splitters,
+                    pad_edges_to=node_cap,
+                    **kw,
+                )
+                labels, rounds = ta.forest.labels, ta.forest.rounds
+                edge_u, edge_v = ta.forest.edge_u, ta.forest.edge_v
+                extras = (
+                    np.asarray(ta.parent),
+                    np.asarray(ta.depth),
+                    np.asarray(ta.subtree_size),
+                    np.asarray(ta.computations.preorder),
+                    np.asarray(ta.computations.postorder),
+                )
             labels = np.asarray(labels)
-            edge_u = edge_v = None
-        elif stage == "forest":
-            forest = spanning_forest(src, dst, node_cap, **kw)
-            labels, rounds = forest.labels, forest.rounds
-            edge_u, edge_v = forest.edge_u, forest.edge_v
-        else:
-            ta = tree_analytics(
-                src, dst, node_cap,
-                rank_engine=self.rank_engine,
-                kernel_impl=self.kernel_impl,
-                num_splitters=self.num_splitters,
-                pad_edges_to=node_cap,
-                **kw,
-            )
-            labels, rounds = ta.forest.labels, ta.forest.rounds
-            edge_u, edge_v = ta.forest.edge_u, ta.forest.edge_v
-            parent = np.asarray(ta.parent)
-            depth = np.asarray(ta.depth)
-            size = np.asarray(ta.subtree_size)
-            pre = np.asarray(ta.computations.preorder)
-            post = np.asarray(ta.computations.postorder)
-        labels = np.asarray(labels)
+            esp.tag(rounds=int(rounds))
 
+        with trace.span("serve.wave.unpack", requests=len(wave)):
+            self._unpack(wave, node_off, labels, edge_u, edge_v, extras)
+
+        # Bucket accounting only for waves that ran to completion: a
+        # wave that failed above (injected fault, OOM, engine error)
+        # never instantiated the bucket's compiled programs.
+        self._buckets.add(bucket)
+        rec = WaveRecord(
+            requests=len(wave), stage=stage,
+            num_nodes=n_union, num_edges=m_union,
+            node_cap=node_cap, edge_cap=edge_cap,
+            new_bucket=new_bucket, rounds=int(rounds),
+        )
+        self.wave_records.append(rec)
+        rec.publish(self.metrics)
+
+    def _unpack(self, wave, node_off, labels, edge_u, edge_v, extras):
+        """Slice the packed union's outputs back to request-local ids."""
+        from repro.core import num_components
+
+        if extras is not None:
+            parent, depth, size, pre, post = extras
         for r, o in zip(wave, node_off):
             hi = o + r.num_nodes
             lab = labels[o:hi] - o
@@ -403,7 +454,7 @@ class GraphServeEngine(WaveScheduler):
                 m = (edge_u >= o) & (edge_u < hi)
                 res.edge_u = (edge_u[m] - o).astype(np.int32)
                 res.edge_v = (edge_v[m] - o).astype(np.int32)
-            if ta is not None and r.kind == "analytics":
+            if extras is not None and r.kind == "analytics":
                 res.parent = (parent[o:hi] - o).astype(np.int32)
                 res.depth = depth[o:hi]
                 res.subtree_size = size[o:hi]
@@ -411,17 +462,6 @@ class GraphServeEngine(WaveScheduler):
                 res.postorder = post[o:hi]
             r.result = res
             r.done = True
-
-        # Bucket accounting only for waves that ran to completion: a
-        # wave that failed above (injected fault, OOM, engine error)
-        # never instantiated the bucket's compiled programs.
-        self._buckets.add(bucket)
-        self.wave_records.append(WaveRecord(
-            requests=len(wave), stage=stage,
-            num_nodes=n_union, num_edges=m_union,
-            node_cap=node_cap, edge_cap=edge_cap,
-            new_bucket=new_bucket, rounds=int(rounds),
-        ))
 
     def run(self) -> list[GraphRequest]:
         """Process the whole queue; returns the requests that reached a

@@ -58,6 +58,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.components import check_choice
+from repro.obs import trace
+from repro.obs.metrics import Registry
 from repro.serve.faults import classify_failure, is_resource_exhausted
 
 FAILURE_POLICIES = ("quarantine", "raise")
@@ -85,6 +87,13 @@ class HealthRecord:
     bisections: int = 0
     wave_runs: int = 0
 
+    def publish(self, registry=None, prefix: str = "serve.health") -> None:
+        """Publish the counters (``run`` excluded -- it is an id, not a
+        quantity) into the metrics registry (``repro.obs.metrics``)."""
+        from repro.obs.metrics import publish_stats
+
+        publish_stats(self, prefix, registry, exclude=("run",))
+
 
 class WaveScheduler:
     """Queue -> waves -> finished, with fault containment and a
@@ -108,6 +117,11 @@ class WaveScheduler:
         self.health: HealthRecord | None = None
         self._delivered = 0  # prefix of self.finished already returned
         self._inflight: set = set()  # uids submitted but not delivered
+        # Per-engine registry (NOT the process-global one): each run()
+        # publishes its HealthRecord and subclasses publish their wave
+        # records here, so an engine's snapshot() is a deterministic
+        # function of its own request stream + fault plan alone.
+        self.metrics = Registry()
 
     # -- admission ----------------------------------------------------
     def submit(self, req) -> None:
@@ -143,19 +157,23 @@ class WaveScheduler:
         retries = 0
         while True:
             self.health.wave_runs += 1
-            try:
-                self._run_wave(wave)
-            except Exception as exc:
-                if self.on_failure == "raise":
-                    raise
-                if (
-                    classify_failure(exc) == "transient"
-                    and retries < self.max_retries
-                ):
-                    retries += 1
-                    self.health.retried += 1
-                    continue
-                return exc
+            # First attempt is a "serve.wave" span, re-runs are
+            # "serve.retry" child attempts; a failing attempt carries
+            # its failure classification as a span tag.
+            name = "serve.wave" if retries == 0 else "serve.retry"
+            with trace.span(name, requests=len(wave), retry=retries) as sp:
+                try:
+                    self._run_wave(wave)
+                except Exception as exc:
+                    if self.on_failure == "raise":
+                        raise
+                    failure = classify_failure(exc)
+                    sp.tag(failure=failure, error=type(exc).__name__)
+                    if failure == "transient" and retries < self.max_retries:
+                        retries += 1
+                        self.health.retried += 1
+                        continue
+                    return exc
             self.finished.extend(wave)
             self.waves += 1
             return None
@@ -169,8 +187,12 @@ class WaveScheduler:
             subs = self._degrade(wave, exc)
             if subs is not None:
                 self.health.degraded += 1
-                for sub in subs:
-                    self._process_wave(sub)
+                with trace.span(
+                    "serve.degrade", requests=len(wave), subs=len(subs),
+                    failure=classify_failure(exc),
+                ):
+                    for sub in subs:
+                        self._process_wave(sub)
                 return
         if len(wave) == 1:
             self._quarantine(wave[0], exc)
@@ -190,15 +212,21 @@ class WaveScheduler:
         they hide another poison)."""
         self.health.bisections += 1
         suspect, stash = list(wave), []
-        while len(suspect) > 1:
-            mid = len(suspect) // 2
-            probe, rest = suspect[:mid], suspect[mid:]
-            e = self._attempt(probe)
-            if e is None:
-                suspect = rest
-            else:
-                suspect, exc = probe, e
-                stash = rest + stash
+        with trace.span(
+            "serve.bisect", suspects=len(wave),
+            failure=classify_failure(exc),
+        ) as bsp:
+            while len(suspect) > 1:
+                mid = len(suspect) // 2
+                probe, rest = suspect[:mid], suspect[mid:]
+                with trace.span("serve.bisect.probe", size=len(probe)):
+                    e = self._attempt(probe)
+                if e is None:
+                    suspect = rest
+                else:
+                    suspect, exc = probe, e
+                    stash = rest + stash
+            bsp.tag(isolated=getattr(suspect[0], "uid", None))
         self._quarantine(suspect[0], exc)
         if stash:
             self._process_wave(stash)
@@ -216,6 +244,10 @@ class WaveScheduler:
         req.error = f"{type(exc).__name__}: {exc}"
         self.health.quarantined += 1
         self.finished.append(req)
+        trace.event(
+            "serve.quarantine", uid=getattr(req, "uid", None),
+            failure=classify_failure(exc), error=type(exc).__name__,
+        )
 
     # -- the outer loop -------------------------------------------------
     def run(self) -> list:
@@ -225,17 +257,28 @@ class WaveScheduler:
         Earlier runs' deliveries are never returned again."""
         self.health = HealthRecord(run=len(self.health_records))
         self.health_records.append(self.health)
-        while self.queue:
-            wave = self._next_wave()
-            if not wave:  # defensive: a stuck _next_wave would spin
-                raise RuntimeError("_next_wave returned an empty wave")
-            self._process_wave(wave)
-        new = self.finished[self._delivered:]
-        self._delivered = len(self.finished)
-        for r in new:
-            self._inflight.discard(getattr(r, "uid", None))
-            if getattr(r, "failed", False):
-                self.health.failed += 1
-            else:
-                self.health.completed += 1
+        with trace.span(
+            "serve.run", run=self.health.run, queued=len(self.queue),
+        ) as sp:
+            while self.queue:
+                wave = self._next_wave()
+                if not wave:  # defensive: a stuck _next_wave would spin
+                    raise RuntimeError("_next_wave returned an empty wave")
+                self._process_wave(wave)
+            new = self.finished[self._delivered:]
+            self._delivered = len(self.finished)
+            for r in new:
+                self._inflight.discard(getattr(r, "uid", None))
+                if getattr(r, "failed", False):
+                    self.health.failed += 1
+                else:
+                    self.health.completed += 1
+            sp.tag(
+                completed=self.health.completed, failed=self.health.failed,
+                wave_runs=self.health.wave_runs,
+            )
+        # One publish per run(): the containment counters land in the
+        # engine's own registry under serve.health.* (the unified
+        # namespace benchmarks/run.py --check pins).
+        self.health.publish(self.metrics)
         return new

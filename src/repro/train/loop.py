@@ -3,13 +3,13 @@ watchdog, optional gradient compression and microbatch accumulation."""
 from __future__ import annotations
 
 import logging
-import time
 from dataclasses import dataclass
 from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace
 from repro.train.checkpoint import CheckpointManager
 from repro.train.compression import compress_decompress, init_error_feedback
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -145,14 +145,20 @@ def train(
     history: list[dict] = []
     for step in range(start_step, loop_cfg.total_steps):
         batch = next(data_iter)
-        t0 = time.perf_counter()
-        if loop_cfg.grad_compression:
-            params, opt_state, ef, metrics = jitted(params, opt_state, ef, batch)
-        else:
-            params, opt_state, metrics = jitted(params, opt_state, batch)
-        jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
-        # The block above already paid the sync (the watchdog times full
+        # timer=True: the span times (and blocks, device=True) even with
+        # tracing disabled -- the straggler watchdog needs dt always.
+        with trace.span(
+            "train.step", device=True, timer=True, step=step,
+        ) as sp:
+            if loop_cfg.grad_compression:
+                params, opt_state, ef, metrics = jitted(
+                    params, opt_state, ef, batch
+                )
+            else:
+                params, opt_state, metrics = jitted(params, opt_state, batch)
+            sp.block_on(metrics["loss"])
+        dt = sp.duration
+        # The span close already paid the sync (the watchdog times full
         # steps); reading the scalar afterwards is free.
         loss = float(metrics["loss"])  # repro-lint: disable=host-sync
         watchdog.observe(step, dt)

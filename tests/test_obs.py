@@ -1,0 +1,281 @@
+"""repro.obs: span tracing + metrics registry (docs/observability.md).
+
+Covers the layer's contracts: disabled tracing is the shared no-op
+singleton (zero allocation, zero events), spans nest with monotonic
+Chrome-trace timestamps, the exported JSON round-trips, the metrics
+snapshot of two identical fault-injected serve runs is identical, and
+the instrumentation adds NO device->host sync (the RL001 lint pass
+over the instrumented tree, plus a traced jitted-CC runtime smoke).
+"""
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from repro.obs import metrics, trace  # noqa: E402
+from repro.obs.metrics import Registry, derived_fragment  # noqa: E402
+from repro.obs.summarize import format_table, main, summarize  # noqa: E402
+from repro.obs.trace import _NULL_SPAN, Tracer  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# tracer: disabled path
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_span_is_the_shared_singleton():
+    t = Tracer()  # trace="off" default
+    s1 = t.span("a", bucket=4)
+    s2 = t.span("b")
+    assert s1 is _NULL_SPAN and s2 is _NULL_SPAN
+    with s1 as sp:
+        assert sp.tag(rounds=3) is sp
+        assert sp.block_on("value") == "value"
+    t.event("instant", uid=1)
+    assert t.events == []
+
+
+def test_disabled_timer_span_still_times_and_blocks():
+    t = Tracer()
+    x = jnp.arange(8)
+    with t.span("step", device=True, timer=True) as sp:
+        y = sp.block_on(x * 2)
+    assert sp.duration > 0.0
+    assert int(y[-1]) == 14
+    assert t.events == []  # timed, not recorded
+
+
+def test_configure_rejects_unknown_modes():
+    t = Tracer()
+    with pytest.raises(ValueError, match="trace"):
+        t.configure(trace="loud")
+    with pytest.raises(ValueError, match="profile"):
+        t.configure(profile="always")
+    t.configure(trace="on", profile="off")
+    assert t.enabled
+
+
+# ---------------------------------------------------------------------------
+# tracer: enabled path
+# ---------------------------------------------------------------------------
+
+
+def test_nested_spans_monotonic_and_contained():
+    t = Tracer(trace="on")
+    with t.span("outer", n=2):
+        with t.span("inner", i=0):
+            pass
+        with t.span("inner", i=1):
+            pass
+    t.event("marker", uid=9)
+    # children record before the parent (close order); the event last
+    names = [e["name"] for e in t.events]
+    assert names == ["inner", "inner", "outer", "marker"]
+    inner0, inner1, outer, marker = t.events
+    assert all(e["ts"] >= 0 for e in t.events)
+    assert inner0["ts"] <= inner1["ts"] <= marker["ts"]
+    # containment: both children inside the parent interval
+    for child in (inner0, inner1):
+        assert outer["ts"] <= child["ts"]
+        assert child["ts"] + child["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    assert outer["args"] == {"n": 2}
+    assert inner1["args"] == {"i": 1}
+    assert marker["ph"] == "i"
+
+
+def test_span_records_exception_tag():
+    t = Tracer(trace="on")
+    with pytest.raises(RuntimeError):
+        with t.span("boom"):
+            raise RuntimeError("x")
+    assert t.events[0]["args"]["exception"] == "RuntimeError"
+
+
+def test_chrome_export_round_trips(tmp_path):
+    t = Tracer(trace="on")
+    with t.span("work", k=1):
+        t.event("mid")
+    path = tmp_path / "trace.json"
+    n = t.export_chrome(str(path))
+    assert n == 2
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} == {"X", "i"}
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["name"] == "work" and x["dur"] >= 0 and x["args"] == {"k": 1}
+
+
+def test_summarize_table_and_require(tmp_path, capsys):
+    t = Tracer(trace="on")
+    for _ in range(3):
+        with t.span("serve.wave"):
+            pass
+    path = tmp_path / "t.json"
+    t.export_chrome(str(path))
+    rows = summarize(t.events)
+    assert rows == [("serve.wave", 3, pytest.approx(rows[0][2]),
+                     pytest.approx(rows[0][3]), pytest.approx(rows[0][4]))]
+    assert "serve.wave" in format_table(rows)
+    assert main([str(path), "--require", "serve.wave"]) == 0
+    capsys.readouterr()
+    assert main([str(path), "--require", "serve.bisect"]) == 1
+    assert "REQUIRE FAIL" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_snapshot_flat_sorted_and_typed():
+    r = Registry()
+    r.inc("b.count")
+    r.inc("b.count", 2)
+    r.gauge("a.frac", 0.25)
+    r.observe("c.ms", 3.0)
+    r.observe("c.ms", 1.0)
+    snap = r.snapshot()
+    assert list(snap) == sorted(snap)
+    assert snap["b.count"] == 3
+    assert snap["a.frac"] == 0.25
+    assert snap["c.ms.count"] == 2 and snap["c.ms.sum"] == 4.0
+    assert snap["c.ms.min"] == 1.0 and snap["c.ms.max"] == 3.0
+
+
+def test_registry_rejects_kind_aliasing():
+    r = Registry()
+    r.inc("x")
+    with pytest.raises(ValueError, match="already a counter"):
+        r.gauge("x", 1.0)
+
+
+def test_derived_fragment_formats_ints_and_floats():
+    frag = derived_fragment({"a.n": 3, "a.frac": 0.5, "b.n": 2.0}, "a.")
+    assert frag == "a.frac=0.500;a.n=3"
+
+
+def test_publish_stats_field_mapping():
+    from dataclasses import dataclass
+
+    @dataclass
+    class S:
+        hit: bool
+        rounds: int
+        frac: float
+        sizes: np.ndarray
+        levels: list
+        name: str
+        missing: None = None
+
+    r = Registry()
+    s = S(True, 4, 0.5, np.array([2, 3]), [1, 2, 3], "skipped")
+    from repro.obs.metrics import publish_stats
+
+    publish_stats(s, "t", r)
+    publish_stats(s, "t", r)  # accumulates
+    snap = r.snapshot()
+    assert snap == {
+        "t.frac": 0.5,       # gauge: last write wins
+        "t.hit": 2,
+        "t.levels.count": 6,
+        "t.rounds": 8,
+        "t.sizes.total": 10.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# engine integration: determinism + no new syncs
+# ---------------------------------------------------------------------------
+
+
+def _chaos_engine():
+    from repro.data.graphs import graph_request_stream
+    from repro.serve import FaultPlan, GraphRequest, GraphServeEngine
+
+    plan = FaultPlan.random(
+        7, range(12), p_poison=0.15, p_transient=0.2, max_transient=1,
+    )
+    eng = GraphServeEngine(max_requests=4, fault_plan=plan, max_retries=1)
+    stream = graph_request_stream(12, kind="cc", family="random", seed=3)
+    for i, g in enumerate(stream):
+        eng.submit(GraphRequest(uid=i, **g))
+    eng.run()
+    return eng
+
+
+def test_engine_metrics_snapshot_deterministic_across_runs():
+    """Two identical fault-injected serve runs -> identical unified
+    snapshots (what lets benchmarks/run.py --check pin them)."""
+    s1 = _chaos_engine().metrics.snapshot()
+    s2 = _chaos_engine().metrics.snapshot()
+    assert s1 == s2
+    assert s1  # nonempty
+    assert any(k.startswith("serve.health.") for k in s1)
+    assert any(k.startswith("serve.graph.wave.") for k in s1)
+    assert s1["serve.health.quarantined"] >= 1  # the plan really fired
+
+
+def test_traced_chaos_run_produces_containment_spans():
+    trace.reset()
+    trace.configure(trace="on")
+    try:
+        _chaos_engine()
+        names = {e["name"] for e in trace.chrome_trace()["traceEvents"]}
+    finally:
+        trace.configure(trace="off")
+        trace.reset()
+    assert {"serve.run", "serve.wave", "serve.wave.pack",
+            "serve.wave.engine", "serve.quarantine"} <= names
+    assert "serve.bisect.probe" in names or "serve.retry" in names
+
+
+def test_traced_jitted_cc_stays_correct_and_synced():
+    """Tracing on: the instrumented engines produce the same labels,
+    and device spans close on already-synced boundaries (no tracer
+    leaks, no exceptions under jit)."""
+    from repro.core import frontier_shiloach_vishkin, shiloach_vishkin
+
+    src = jnp.asarray(np.array([0, 1, 2, 4], np.int32))
+    dst = jnp.asarray(np.array([1, 2, 3, 5], np.int32))
+    base_d, _ = shiloach_vishkin(src, dst, 8)
+    base_f, _ = frontier_shiloach_vishkin(src, dst, 8)
+    trace.reset()
+    trace.configure(trace="on")
+    try:
+        lab_d, _ = shiloach_vishkin(src, dst, 8)
+        lab_f, _ = frontier_shiloach_vishkin(src, dst, 8)
+        names = {e["name"] for e in trace.chrome_trace()["traceEvents"]}
+    finally:
+        trace.configure(trace="off")
+        trace.reset()
+    np.testing.assert_array_equal(np.asarray(lab_d), np.asarray(base_d))
+    np.testing.assert_array_equal(np.asarray(lab_f), np.asarray(base_f))
+    assert "cc.dense" in names
+    assert "cc.frontier" in names and "cc.frontier.level" in names
+
+
+def test_instrumented_tree_adds_no_host_syncs():
+    """RL001 regression: the obs instrumentation must attach only at
+    boundaries that already sync -- zero new host-sync findings across
+    the instrumented tree."""
+    from tools.lint import load_baseline, run_lint, split_baselined
+    from tools.lint.passes import PASS_BY_NAME
+
+    findings = run_lint(
+        [os.path.join(_ROOT, "src")],
+        root=_ROOT,
+        passes=[PASS_BY_NAME["host-sync"]],
+    )
+    baseline = load_baseline(
+        os.path.join(_ROOT, "tools", "lint", "baseline.json")
+    )
+    new, _old, stale = split_baselined(findings, baseline)
+    assert [f.format() for f in new] == []

@@ -39,6 +39,8 @@ KNOBS = {
     "kind": ("src/repro/serve/graph.py", "KINDS"),
     "on_overflow": ("src/repro/serve/engine.py", "OVERFLOW_POLICIES"),
     "on_failure": ("src/repro/serve/waves.py", "FAILURE_POLICIES"),
+    "trace": ("src/repro/obs/trace.py", "TRACE_MODES"),
+    "profile": ("src/repro/obs/trace.py", "PROFILE_MODES"),
 }
 
 DOCS_REL = "docs/engines.md"

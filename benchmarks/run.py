@@ -157,6 +157,7 @@ def main(argv=None) -> None:
         multidev_scaling,
         roofline_table,
         serve_chaos,
+        sssp_frontier,
         table2_packing,
         table3_splitters,
         tree_ops,
@@ -169,6 +170,7 @@ def main(argv=None) -> None:
         ("fig3_per_element", fig3_per_element.run),
         ("fig4_cc", fig4_cc.run),
         ("cc_frontier", cc_frontier.run),
+        ("sssp_frontier", sssp_frontier.run),
         ("tree_ops", tree_ops.run),
         ("graph_serve", graph_serve.run),
         ("serve_chaos", serve_chaos.run),

@@ -97,6 +97,48 @@ def run(num_requests: int | None = None) -> list[str]:
         f"({t_chaos / max(t_clean, 1e-12):.2f}x clean wall)",
         flush=True,
     )
+
+    # kind="sssp" waves through the SAME containment machinery: a
+    # weighted multi-source stream, clean then with poison + transient
+    # + forced-nonconvergence injections (the relax-bound sentinel).
+    R2 = max(8, R // 2)
+    sstream = graph_request_stream(
+        R2, kind="sssp", family="random", seed=37
+    )
+    t0 = time.perf_counter()  # repro-lint: disable=block-timer
+    sclean = _serve(sstream)
+    t_sclean = time.perf_counter() - t0  # repro-lint: disable=block-timer
+    h = sclean.health_records[-1]
+    lines.append(emit(
+        f"serve_chaos/sssp_clean/req={R2}",
+        t_sclean / R2 * 1e6,
+        f"completed={h.completed};failed={h.failed};"
+        f"wave_runs={h.wave_runs};waves={sclean.waves}",
+    ))
+    # higher rates than the cc stream: R2 is half the size, and the
+    # seed must light up all three injection paths even at smoke scale
+    splan = FaultPlan.random(
+        40, range(R2), p_poison=0.2, p_transient=0.2, max_transient=2,
+        p_nonconverge=0.12,
+    )
+    t0 = time.perf_counter()  # repro-lint: disable=block-timer
+    seng = _serve(sstream, splan)
+    t_schaos = time.perf_counter() - t0  # repro-lint: disable=block-timer
+    h = seng.health_records[-1]
+    lines.append(emit(
+        f"serve_chaos/sssp_faulty/req={R2}",
+        t_schaos / R2 * 1e6,
+        f"completed={h.completed};failed={h.failed};"
+        f"retried={h.retried};quarantined={h.quarantined};"
+        f"degraded={h.degraded};bisections={h.bisections};"
+        f"wave_runs={h.wave_runs}",
+    ))
+    print(
+        f"# serve_chaos[sssp]: {h.failed}/{R2} quarantined, "
+        f"{h.wave_runs - sclean.health_records[-1].wave_runs} extra "
+        f"wave runs for containment",
+        flush=True,
+    )
     return lines
 
 

@@ -1,0 +1,114 @@
+"""Frontier vs dense Bellman-Ford: edge-relaxation visits per family.
+
+The SSSP analogue of ``cc_frontier``: sweeps graph families where the
+frontier advances through a shrinking (or never-large) active set and
+reports, per family: wall time for both engines, total relax-slot
+visits (``SsspStats.relax_visits`` vs the dense engine's ``m2 *
+rounds`` -- every oriented edge every round), the visit-reduction
+ratio, and the frontier engine's extra full-list mask gathers
+(``mask_visits``; unlike CC the compaction is per-level, see
+``core/sssp.py``). Low-diameter families (giant+dust, star, random)
+converge in a handful of levels, so the frontier engine relaxes a
+small multiple of m2 while dense pays m2 per round; the chain family
+(capped: level-synchronous BF is O(diameter) rounds, the paper's
+worst case) shows the extreme -- a constant-size advancing front vs a
+full dense sweep per round. A batched multi-source line pins the
+shared-compile row count. All counters are deterministic and guarded
+by ``run.py --check``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core import bellman_ford, frontier_bellman_ford
+from repro.ops.kiss import giant_dust_graph, list_graph, random_graph
+
+
+def _star(n):
+    return np.stack(
+        [np.zeros(n - 1, np.int32), np.arange(1, n, dtype=np.int32)],
+        axis=1,
+    )
+
+
+def _families(n):
+    # level-synchronous BF runs O(weighted-hop-diameter) host-synced
+    # levels, so the high-diameter families are capped at an absolute
+    # size (their round count IS their size; scaling them up only
+    # scales the host loop, not the device work the sweep measures)
+    gd = min(n, 1000)
+    ch = min(n, 512)
+    return {
+        "giant+dust": (gd, giant_dust_graph(gd, 0.9, seed=1)),
+        "star": (n, _star(n)),
+        "random": (n, random_graph(n, 2.0 / max(n - 1, 1), seed=2)),
+        "chain": (ch, list_graph(ch, 1, seed=3)),
+    }
+
+
+def _weights(edges, salt=0):
+    r = np.random.default_rng(100 + salt)
+    return (r.integers(0, 8, size=len(edges)) / 4.0).astype(np.float32)
+
+
+def run(n: int | None = None) -> list[str]:
+    n = n or int(800_000 * SCALE)
+    lines = []
+    for fam, (nf, edges) in _families(n).items():
+        src, dst = edges[:, 0], edges[:, 1]
+        w = _weights(edges)
+        t_dense = time_fn(
+            lambda: bellman_ford(src, dst, w, nf)[0], iters=2
+        )
+        _, _, _, dstats = bellman_ford(src, dst, w, nf, with_stats=True)
+        # min_bucket=64: the default floor (1024) exceeds m2 at smoke
+        # scale, which would silently degrade frontier to dense
+        t_front = time_fn(
+            lambda: frontier_bellman_ford(src, dst, w, nf, min_bucket=64)[0],
+            iters=2,
+        )
+        _, _, _, fstats = frontier_bellman_ford(
+            src, dst, w, nf, min_bucket=64, with_stats=True
+        )
+        ratio = dstats.relax_visits / max(fstats.relax_visits, 1)
+        lines.append(emit(
+            f"sssp_frontier/dense/{fam}/n={nf}",
+            t_dense * 1e6,
+            f"rounds={dstats.rounds};relax_visits={dstats.relax_visits};"
+            f"m2={dstats.m2}",
+            spread=(t_dense.p10 * 1e6, t_dense.p90 * 1e6),
+        ))
+        lines.append(emit(
+            f"sssp_frontier/frontier/{fam}/n={nf}",
+            t_front * 1e6,
+            f"rounds={fstats.rounds};relax_visits={fstats.relax_visits};"
+            f"mask_visits={fstats.mask_visits};"
+            f"visit_ratio={ratio:.2f};levels={len(fstats.levels)}",
+            spread=(t_front.p10 * 1e6, t_front.p90 * 1e6),
+        ))
+
+    # batched multi-source: S rows share one padded compile; visits
+    # count buffer slots (row-batched), so they match the solo run
+    nf, edges = _families(n)["random"]
+    src, dst = edges[:, 0], edges[:, 1]
+    w = _weights(edges)
+    srcs = np.arange(4, dtype=np.int32) % nf
+    t_batch = time_fn(
+        lambda: bellman_ford(src, dst, w, nf, sources=srcs)[0], iters=2
+    )
+    _, _, _, bstats = bellman_ford(
+        src, dst, w, nf, sources=srcs, with_stats=True
+    )
+    lines.append(emit(
+        f"sssp_frontier/batched/random/n={nf}/S={len(srcs)}",
+        t_batch * 1e6,
+        f"rounds={bstats.rounds};relax_visits={bstats.relax_visits};"
+        f"num_sources={bstats.num_sources}",
+        spread=(t_batch.p10 * 1e6, t_batch.p90 * 1e6),
+    ))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

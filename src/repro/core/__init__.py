@@ -17,6 +17,14 @@ from repro.core.components import (
     ConvergenceError,
 )
 from repro.core.frontier import frontier_shiloach_vishkin, FrontierStats
+from repro.core.sssp import (
+    SSSP_ENGINES,
+    SsspStats,
+    bellman_ford,
+    frontier_bellman_ford,
+    shortest_paths,
+    sssp_round_bound,
+)
 from repro.core.pram import (
     striding_indices,
     partitioning_indices,
@@ -367,6 +375,12 @@ __all__ = [
     "shiloach_vishkin",
     "frontier_shiloach_vishkin",
     "FrontierStats",
+    "shortest_paths",
+    "bellman_ford",
+    "frontier_bellman_ford",
+    "SsspStats",
+    "SSSP_ENGINES",
+    "sssp_round_bound",
     "label_propagation",
     "sv_round_bound",
     "ConvergenceError",

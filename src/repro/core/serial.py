@@ -51,6 +51,106 @@ def serial_connected_components(edges: np.ndarray, n: int) -> np.ndarray:
     return np.array([uf.find(i) for i in range(n)], dtype=np.int64)
 
 
+def _sssp_arcs(edges: np.ndarray, weights: np.ndarray | None):
+    """Both-orientation (u, v, w) arcs in float32 -- the engines'
+    undirected 2m walk. ``weights=None`` means unit weights (BFS)."""
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    m = len(edges)
+    w = (
+        np.ones(m, np.float32)
+        if weights is None
+        else np.asarray(weights, np.float32).ravel()
+    )
+    assert len(w) == m, "weights length != edge count"
+    u = np.concatenate([edges[:, 0], edges[:, 1]])
+    v = np.concatenate([edges[:, 1], edges[:, 0]])
+    return u, v, np.concatenate([w, w])
+
+
+def serial_sssp_parents(
+    edges: np.ndarray,
+    weights: np.ndarray | None,
+    dist: np.ndarray,
+    source: int,
+) -> np.ndarray:
+    """The engines' deterministic parent rule, serially: ``parent[v] =
+    min{u : u != v, dist[u] + w(u, v) == dist[v]}`` (float32 compare,
+    both edge orientations), ``parent[source] = source``, unreachable
+    ``-1``. Shared by both oracles so the tie-break matches
+    ``repro.core.sssp._min_parents`` bit-for-bit."""
+    n = len(dist)
+    u, v, w = _sssp_arcs(edges, weights)
+    parent = np.full(n, n, np.int64)
+    for ui, vi, wi in zip(u, v, w):
+        if ui == vi:
+            continue  # self-relaxes never parent (engine rule)
+        if np.float32(dist[ui] + wi) == dist[vi]:
+            parent[vi] = min(parent[vi], ui)
+    parent[parent == n] = -1
+    parent[np.isinf(dist)] = -1
+    parent[source] = source
+    return parent.astype(np.int64)
+
+
+def serial_dijkstra(
+    edges: np.ndarray,
+    weights: np.ndarray | None,
+    n: int,
+    source: int,
+):
+    """Binary-heap Dijkstra in float32 (the sequential CPU baseline for
+    ``repro.core.sssp``; weights must be >= 0). Returns ``(dist,
+    parent)``: float32 distances with ``+inf`` for unreachable nodes,
+    parents per ``serial_sssp_parents``. Float32 addition is monotonic
+    and every path cost accumulates left-to-right one edge at a time --
+    the same operations the relax-min engines perform -- so distances
+    are bit-identical to Bellman-Ford's fixpoint."""
+    import heapq
+
+    u, v, w = _sssp_arcs(edges, weights)
+    adj: list[list[tuple[int, np.float32]]] = [[] for _ in range(n)]
+    for ui, vi, wi in zip(u, v, w):
+        adj[ui].append((int(vi), wi))
+    dist = np.full(n, np.inf, np.float32)
+    dist[source] = np.float32(0.0)
+    heap = [(np.float32(0.0), source)]
+    done = np.zeros(n, bool)
+    while heap:
+        d, x = heapq.heappop(heap)
+        if done[x]:
+            continue
+        done[x] = True
+        for y, wy in adj[x]:
+            nd = np.float32(dist[x] + wy)
+            if nd < dist[y]:
+                dist[y] = nd
+                heapq.heappush(heap, (nd, y))
+    return dist, serial_sssp_parents(edges, weights, dist, source)
+
+
+def serial_bellman_ford(
+    edges: np.ndarray,
+    weights: np.ndarray | None,
+    n: int,
+    source: int,
+):
+    """Round-synchronous serial Bellman-Ford in float32: relax every
+    arc each round until the fixpoint (at most n - 1 improving rounds).
+    Returns ``(dist, parent)`` exactly like ``serial_dijkstra`` -- the
+    two oracles agree bit-for-bit, and both pin the engines."""
+    u, v, w = _sssp_arcs(edges, weights)
+    dist = np.full(n, np.inf, np.float32)
+    dist[source] = np.float32(0.0)
+    for _ in range(max(n, 1)):
+        cand = (dist[u] + w).astype(np.float32)
+        new = dist.copy()
+        np.minimum.at(new, v, cand)
+        if (new == dist).all():
+            break
+        dist = new
+    return dist, serial_sssp_parents(edges, weights, dist, source)
+
+
 def canonicalize_labels(labels: np.ndarray) -> np.ndarray:
     """Map each component label to the min node id inside it (for equality
     testing across algorithms that pick different representatives)."""

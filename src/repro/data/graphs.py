@@ -216,6 +216,11 @@ def graph_request_stream(
     them); ``family="tree"`` builds uniform-attachment random trees
     (``random_tree``), the forest-shaped traffic the tree-analytics
     stage is tuned for.
+
+    ``kind="sssp"`` entries additionally carry ``"weights"`` (KISS
+    eighths in ``{0, 0.25, ..., 1.75}`` -- zero weights included on
+    purpose, they are an adversarial tie-break case) and ``"sources"``
+    (1-2 KISS-uniform nodes, duplicates allowed).
     """
     if family not in ("random", "tree"):
         raise ValueError(f"unknown family {family!r}")
@@ -233,7 +238,15 @@ def graph_request_stream(
             ends = KissRng(seed * 9973 + i + 1, 1024).uniform_ints((m, 2), n)
             src = ends[:, 0].astype(np.int32)
             dst = ends[:, 1].astype(np.int32)
-        out.append({"src": src, "dst": dst, "num_nodes": n, "kind": kind})
+        entry = {"src": src, "dst": dst, "num_nodes": n, "kind": kind}
+        if kind == "sssp":
+            wrng = KissRng(seed * 6007 + i + 1, 1024)
+            entry["weights"] = (
+                wrng.uniform_ints((len(src),), 8).astype(np.float32) / 4.0
+            )
+            k = 1 + int(spans[i] % 2)
+            entry["sources"] = wrng.uniform_ints((k,), n).astype(np.int32)
+        out.append(entry)
     return out
 
 

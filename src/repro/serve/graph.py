@@ -62,25 +62,36 @@ from repro.core.frontier import next_pow2
 from repro.obs import trace
 from repro.serve.waves import WaveScheduler
 
-# Request kinds, in pipeline-stage order: each stage subsumes the ones
-# before it, so a mixed wave runs the deepest stage any member needs
-# (record_hooks and the tour stages are label-neutral by construction).
-KINDS = ("cc", "forest", "analytics")
-_STAGE = {k: i for i, k in enumerate(KINDS)}
+# Request kinds. The first three form a pipeline-stage chain -- each
+# stage subsumes the ones before it, so a mixed wave runs the deepest
+# stage any member needs (record_hooks and the tour stages are
+# label-neutral by construction). "sssp" is OUTSIDE the chain: a
+# shortest-path wave runs a different device program (relax-min over
+# weighted edges), so ``_next_wave`` packs sssp requests only with
+# other sssp requests -- stage promotion never mixes the families.
+KINDS = ("cc", "forest", "analytics", "sssp")
+_STAGE = {k: i for i, k in enumerate(KINDS) if k != "sssp"}
+
+
+def _family(kind: str) -> str:
+    """Wave-packing family: kinds that can share one device program."""
+    return "sssp" if kind == "sssp" else "cc-chain"
 
 
 @dataclass
 class GraphResult:
     """Per-request outputs, unpacked to request-local node ids.
 
-    ``labels``/``num_components`` are filled for every kind;
-    ``edge_u``/``edge_v`` (the spanning forest, in solo edge order) from
-    kind ``"forest"`` up; the tree-analytics arrays only for
-    ``"analytics"``.
+    ``labels``/``num_components`` are filled for every kind in the
+    cc-chain family; ``edge_u``/``edge_v`` (the spanning forest, in
+    solo edge order) from kind ``"forest"`` up; the tree-analytics
+    arrays only for ``"analytics"``. Kind ``"sssp"`` instead fills
+    ``dist``/``pred``/``sources``: one row per source, ``+inf`` /
+    ``-1`` for unreachable nodes.
     """
 
-    labels: np.ndarray
-    num_components: int
+    labels: np.ndarray | None = None
+    num_components: int = 0
     edge_u: np.ndarray | None = None
     edge_v: np.ndarray | None = None
     parent: np.ndarray | None = None
@@ -88,6 +99,9 @@ class GraphResult:
     subtree_size: np.ndarray | None = None
     preorder: np.ndarray | None = None
     postorder: np.ndarray | None = None
+    dist: np.ndarray | None = None  # (num_sources, n) float32
+    pred: np.ndarray | None = None  # (num_sources, n) int32 parent tree
+    sources: np.ndarray | None = None  # the request's source nodes
 
 
 @dataclass
@@ -97,6 +111,10 @@ class GraphRequest:
     dst: np.ndarray
     num_nodes: int
     kind: str = "analytics"
+    # sssp-only inputs: per-edge weights (None = unit / BFS) and the
+    # source nodes (None = [0]); rejected on non-sssp requests.
+    weights: np.ndarray | None = None
+    sources: np.ndarray | None = None
     result: GraphResult | None = None
     done: bool = False
     failed: bool = False  # quarantined by the containment layer
@@ -118,7 +136,8 @@ class WaveRecord:
     node_cap: int
     edge_cap: int
     new_bucket: bool  # first wave in this (stage, node_cap, edge_cap)
-    rounds: int  # SV rounds of the union run (max over members)
+    rounds: int  # SV/relax rounds of the union run (max over members)
+    src_cap: int = 0  # sssp waves: padded source-row capacity
 
     def publish(
         self, registry=None, prefix: str = "serve.graph.wave"
@@ -143,6 +162,12 @@ class GraphServeEngine(WaveScheduler):
       dropped later).
     * ``min_nodes`` (64) / ``min_edges`` (128) -- bucket floor, so tiny
       waves share one small-bucket compilation instead of one per size.
+    * ``max_sources`` (8) -- per-request source budget for
+      ``kind="sssp"`` requests; a wave's source rows pack into a
+      ``src_cap`` power-of-two bucket dimension (see
+      ``_run_sssp_wave``). sssp waves map ``engine="auto"`` to
+      ``"dense"`` like CC waves and reject ``mesh=`` /
+      ``engine="sharded_frontier"`` at submit.
     * ``engine=`` / ``rank_engine=`` / ``kernel_impl=`` /
       ``num_splitters=`` / ``mesh=`` and any extra engine kwargs
       (``hook_impl=``, ``exchange=``, ``min_bucket=``, ...) dispatch
@@ -167,6 +192,7 @@ class GraphServeEngine(WaveScheduler):
         max_edges: int = 16384,
         min_nodes: int = 64,
         min_edges: int = 128,
+        max_sources: int = 8,
         engine: str = "auto",
         rank_engine: str = "auto",
         kernel_impl: str = "auto",
@@ -202,6 +228,7 @@ class GraphServeEngine(WaveScheduler):
         self.max_edges = max_edges
         self.min_nodes = min_nodes
         self.min_edges = min_edges
+        self.max_sources = max_sources  # per-request sssp source budget
         # Degradation caps (permanent, only ever lowered): the packing
         # budget after OOM-shaped failures; see _degrade.
         self._node_budget = max_nodes
@@ -272,15 +299,70 @@ class GraphServeEngine(WaveScheduler):
                 f"request {req.uid}: edge endpoints outside "
                 f"[0, {req.num_nodes})"
             )
+        if req.kind == "sssp":
+            self._validate_sssp(req)
+        elif req.weights is not None or req.sources is not None:
+            raise ValueError(
+                f"request {req.uid}: weights/sources are sssp-only fields"
+            )
         super().submit(req)
+
+    def _validate_sssp(self, req: GraphRequest) -> None:
+        """Normalize + validate the sssp-only request fields, loudly."""
+        if self.mesh is not None or self.engine == "sharded_frontier":
+            raise ValueError(
+                f"request {req.uid}: sssp waves run the single-device "
+                "relax engines; drop mesh= / engine='sharded_frontier'"
+            )
+        extra = set(self.engine_kwargs) - {"min_bucket"}
+        if extra:
+            raise ValueError(
+                f"request {req.uid}: {sorted(extra)} are not sssp "
+                "engine knobs (only min_bucket= carries over)"
+            )
+        if req.weights is None:
+            w = np.ones(req.num_edges, np.float32)  # unit weights: BFS
+        else:
+            w = np.asarray(req.weights, np.float32).ravel()
+        if w.shape != req.src.shape:
+            raise ValueError(
+                f"request {req.uid}: weights length {w.shape} != edge "
+                f"count {req.src.shape}"
+            )
+        if req.num_edges and (not np.isfinite(w).all() or bool((w < 0).any())):
+            raise ValueError(
+                f"request {req.uid}: sssp weights must be finite and >= 0"
+            )
+        req.weights = w
+        if req.sources is None:
+            s = np.zeros(1, np.int32)
+        else:
+            s = np.atleast_1d(np.asarray(req.sources, np.int32)).ravel()
+        if not 1 <= len(s) <= self.max_sources:
+            raise ValueError(
+                f"request {req.uid}: {len(s)} sources exceeds the "
+                f"per-request budget (1..max_sources={self.max_sources})"
+            )
+        if int(s.min()) < 0 or int(s.max()) >= req.num_nodes:
+            raise ValueError(
+                f"request {req.uid}: sources outside [0, {req.num_nodes})"
+            )
+        req.sources = s
 
     def _next_wave(self) -> list[GraphRequest]:
         """FIFO greedy packing under the node/edge budget (the
-        degradation caps, when an OOM has lowered them)."""
+        degradation caps, when an OOM has lowered them). A wave stays
+        within one packing FAMILY (cc-chain vs sssp): the families run
+        different device programs, so mixing them would force both
+        into one wave's single batched call. FIFO order is preserved
+        inside the wave; a family boundary closes the wave (no
+        reordering past it, so completion order stays deterministic)."""
         wave: list[GraphRequest] = []
         nodes = edges = 0
         while self.queue and len(wave) < self.max_requests:
             r = self.queue[0]
+            if wave and _family(r.kind) != _family(wave[0].kind):
+                break
             if wave and (
                 nodes + r.num_nodes > self._node_budget
                 or edges + r.num_edges > self._edge_budget
@@ -343,6 +425,9 @@ class GraphServeEngine(WaveScheduler):
 
         if self.fault_plan is not None:
             self.fault_plan.check_wave(wave)
+
+        if wave[0].kind == "sssp":  # family-pure by _next_wave
+            return self._run_sssp_wave(wave)
 
         stage = KINDS[max(_STAGE[r.kind] for r in wave)]
         node_off = np.cumsum([0] + [r.num_nodes for r in wave])
@@ -429,6 +514,97 @@ class GraphServeEngine(WaveScheduler):
             num_nodes=n_union, num_edges=m_union,
             node_cap=node_cap, edge_cap=edge_cap,
             new_bucket=new_bucket, rounds=int(rounds),
+        )
+        self.wave_records.append(rec)
+        rec.publish(self.metrics)
+
+    def _run_sssp_wave(self, wave: list[GraphRequest]):
+        """The sssp-family wave: one batched multi-source
+        ``shortest_paths`` call over the disjoint union. Every
+        request's sources become rows of the packed distance array
+        (offset-shifted), padded to a ``src_cap`` power-of-two row
+        count; pad edges are +inf-weight self-loops (inert under
+        relax-min, never parents) and pad source rows target a pad
+        node when one exists (an isolated node: the row converges
+        immediately). Disjoint union ⇒ request i's rows are its solo
+        rows bit-exactly: no finite-weight path crosses an offset
+        boundary, so other requests' columns stay +inf / -1 and are
+        sliced away at unpack. ``fault_plan.check_wave`` already ran
+        in ``_run_wave``."""
+        from repro.core import shortest_paths
+
+        stage = "sssp"
+        node_off = np.cumsum([0] + [r.num_nodes for r in wave])
+        n_union = int(node_off[-1])
+        m_union = sum(r.num_edges for r in wave)
+        node_cap = max(self.min_nodes, next_pow2(n_union))
+        edge_cap = max(self.min_edges, next_pow2(max(m_union, 1)))
+        row_off = np.cumsum([0] + [len(r.sources) for r in wave])
+        src_cap = next_pow2(int(row_off[-1]))
+        if self.fault_plan is not None:
+            self.fault_plan.check_bucket(node_cap)
+        with trace.span(
+            "serve.wave.pack", requests=len(wave), stage=stage,
+            node_cap=node_cap, edge_cap=edge_cap, src_cap=src_cap,
+        ):
+            src = np.zeros((edge_cap,), np.int32)  # pad: self-loops...
+            dst = np.zeros((edge_cap,), np.int32)
+            wts = np.full((edge_cap,), np.inf, np.float32)  # ...at +inf
+            pad_src = n_union if n_union < node_cap else 0
+            srcs = np.full((src_cap,), pad_src, np.int32)
+            eo = 0
+            for r, o, ro in zip(wave, node_off, row_off):
+                src[eo:eo + r.num_edges] = r.src + o
+                dst[eo:eo + r.num_edges] = r.dst + o
+                wts[eo:eo + r.num_edges] = r.weights
+                eo += r.num_edges
+                srcs[ro:ro + len(r.sources)] = r.sources + o
+
+        bucket = (stage, node_cap, edge_cap, src_cap)
+        new_bucket = bucket not in self._buckets
+
+        # "auto" resolves to "dense" for the same reason as CC serving:
+        # the frontier ladder's data-dependent inner buckets would break
+        # the wave's compile-count guarantee. A pinned "frontier" is
+        # honoured (bit-exact; bounded ladder compiles per bucket).
+        engine = "frontier" if self.engine == "frontier" else "dense"
+        kw = dict(self.engine_kwargs)  # only min_bucket= survives submit
+        if engine != "frontier":
+            kw.pop("min_bucket", None)
+        if self.fault_plan is not None and self.fault_plan.wants_nonconverge(
+            wave
+        ):
+            kw["max_rounds"] = 0  # fire the REAL relax-bound sentinel
+        with trace.span(
+            "serve.wave.engine", stage=stage, requests=len(wave),
+            node_cap=node_cap, edge_cap=edge_cap, src_cap=src_cap,
+            new_bucket=new_bucket, engine=engine,
+        ) as esp:
+            dist, pred, rounds = shortest_paths(
+                src, dst, wts, node_cap, sources=srcs, engine=engine, **kw
+            )
+            dist = np.asarray(dist)
+            pred = np.asarray(pred)
+            esp.tag(rounds=int(rounds))
+
+        with trace.span("serve.wave.unpack", requests=len(wave)):
+            for r, o, ro in zip(wave, node_off, row_off):
+                hi = o + r.num_nodes
+                p = pred[ro:ro + len(r.sources), o:hi]
+                r.result = GraphResult(
+                    dist=dist[ro:ro + len(r.sources), o:hi],
+                    # unreachable stays -1; reachable parents shift back
+                    pred=np.where(p >= 0, p - o, -1).astype(np.int32),
+                    sources=r.sources.copy(),
+                )
+                r.done = True
+
+        self._buckets.add(bucket)
+        rec = WaveRecord(
+            requests=len(wave), stage=stage,
+            num_nodes=n_union, num_edges=m_union,
+            node_cap=node_cap, edge_cap=edge_cap,
+            new_bucket=new_bucket, rounds=int(rounds), src_cap=src_cap,
         )
         self.wave_records.append(rec)
         rec.publish(self.metrics)

@@ -31,3 +31,18 @@ except ImportError:
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_code_growth():
+    # The CPU backend keeps every compiled executable's JIT code pages
+    # alive for the life of the process; once the suite accumulates
+    # enough distinct compilations, LLVM segfaults inside
+    # backend_compile (deterministically, at whichever test crosses the
+    # threshold). Dropping the caches at each module boundary bounds the
+    # accumulation — modules rarely share compiled shapes, so the extra
+    # recompiles are cheap.
+    yield
+    import jax
+
+    jax.clear_caches()

@@ -416,21 +416,29 @@ def test_malformed_submit_rejected_before_any_wave():
 # ---------------------------------------------------------------------------
 
 
-def _chaos_round(num_requests, seed, width):
+def _chaos_round(num_requests, seed, width, kinds=("analytics",)):
     """Random stream x random FaultPlan: every request terminates
     exactly once (done xor failed) and every non-quarantined result is
-    bit-exact vs the solo engines."""
+    bit-exact vs the solo engines. ``kinds`` draws each request's kind
+    (mixing "sssp" in exercises the family-separated wave packing
+    under faults)."""
     r = np.random.default_rng(seed)
     stream = []
     for _ in range(num_requests):
         n = int(r.integers(1, 14))
         m = int(r.integers(0, 4 * n))
-        stream.append({
+        g = {
             "src": r.integers(0, n, m).astype(np.int32),
             "dst": r.integers(0, n, m).astype(np.int32),
             "num_nodes": n,
-            "kind": "analytics",
-        })
+            "kind": kinds[int(r.integers(0, len(kinds)))],
+        }
+        if g["kind"] == "sssp":
+            g["weights"] = (r.integers(0, 8, m) / 4.0).astype(np.float32)
+            g["sources"] = r.integers(
+                0, n, int(r.integers(1, 3))
+            ).astype(np.int32)
+        stream.append(g)
     plan = FaultPlan.random(
         seed, range(num_requests), p_poison=0.25, p_transient=0.25,
         max_transient=2, p_nonconverge=0.1,
@@ -471,3 +479,103 @@ def test_chaos_deterministic_seeds(seed):
     pins three deterministic chaos rounds so the containment paths run
     in every environment (CI chaos-smoke)."""
     _chaos_round(6, seed, 3)
+
+
+# ---------------------------------------------------------------------------
+# kind="sssp" fault containment
+# ---------------------------------------------------------------------------
+
+
+def test_sssp_poison_bisected_within_log_bound():
+    """One poison in a K-request sssp wave: same acceptance bound as
+    the cc-chain kinds, survivors' dist/pred bit-exact vs solo."""
+    k, poison = 8, 3
+    stream = _stream(k, seed=41, kind="sssp")
+    eng = GraphServeEngine(
+        max_requests=k, fault_plan=FaultPlan(poison_uids=frozenset([poison])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == k
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[poison].failed and "InjectedEngineError" in (
+        by_uid[poison].error
+    )
+    for uid in set(range(k)) - {poison}:
+        assert not by_uid[uid].failed
+        _assert_matches_solo(by_uid[uid], stream[uid])
+    h = eng.health_records[-1]
+    assert h.wave_runs - 1 <= math.ceil(math.log2(k)) + 1
+    assert h.quarantined == 1 and h.completed == k - 1
+    assert all(w.stage == "sssp" for w in eng.wave_records)
+
+
+def test_sssp_transient_fault_retried_in_place():
+    stream = _stream(4, seed=43, kind="sssp")
+    eng = GraphServeEngine(
+        max_requests=4, max_retries=1,
+        fault_plan=FaultPlan(transient_uids={2: 1}),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert all(not r.failed for r in done)
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid])
+    h = eng.health_records[-1]
+    assert h.retried == 1 and h.quarantined == 0 and h.wave_runs == 2
+
+
+def test_sssp_nonconvergence_fires_relax_bound_sentinel():
+    """wants_nonconverge forces max_rounds=0 so the REAL relax-loop
+    bound in core.sssp fires (not a fake error): the wave quarantines
+    with ConvergenceError, other sssp waves stay bit-exact."""
+    stream = _stream(6, seed=45, kind="sssp")
+    eng = GraphServeEngine(
+        max_requests=2,
+        fault_plan=FaultPlan(nonconverge_uids=frozenset([2])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    by_uid = {r.uid: r for r in done}
+    assert len(done) == 6
+    assert by_uid[2].failed and "ConvergenceError" in by_uid[2].error
+    assert "max_rounds" in by_uid[2].error  # the core sentinel's text
+    for uid in set(range(6)) - {2}:
+        assert not by_uid[uid].failed
+        _assert_matches_solo(by_uid[uid], stream[uid])
+
+
+def test_sssp_oom_degrades_bucket_and_completes_everything():
+    stream = _stream(8, seed=47, kind="sssp")
+    probe = GraphServeEngine(max_requests=8)
+    node_cap, _ = probe._wave_caps(_requests(stream))
+    eng = GraphServeEngine(
+        max_requests=8,
+        fault_plan=FaultPlan(oom_node_caps=frozenset([node_cap])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 8 and all(not r.failed for r in done)
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid])
+    assert eng.health_records[-1].degraded >= 1
+    assert all(w.node_cap < node_cap for w in eng.wave_records)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 7), st.integers(0, 10_000), st.integers(1, 4))
+def test_chaos_property_mixed_kinds_with_sssp(num_requests, seed, width):
+    """The chaos property over mixed analytics/sssp streams: faults +
+    family-separated packing never break exactly-once or bit-exact."""
+    _chaos_round(num_requests, seed, width, kinds=("analytics", "sssp"))
+
+
+@pytest.mark.parametrize("seed", [7, 303])
+def test_chaos_deterministic_seeds_sssp(seed):
+    """Deterministic mixed-kind chaos rounds (run even without
+    hypothesis), so the sssp containment paths are CI chaos-smoke."""
+    _chaos_round(6, seed, 3, kinds=("analytics", "sssp"))

@@ -28,6 +28,26 @@ def _assert_matches_solo(req, g, *, engine="dense", mesh=None):
     """Batched result == the same engine run on the request alone."""
     res = req.result
     assert req.done and res is not None
+    if g["kind"] == "sssp":
+        # sssp engines are bit-exact across engines, so "dense" pins
+        # the solo baseline regardless of what the wave ran.
+        from repro.core import shortest_paths
+
+        sources = g.get("sources")
+        if sources is None:
+            sources = np.zeros(1, np.int32)
+        dist, pred, _ = shortest_paths(
+            g["src"], g["dst"], g.get("weights"), g["num_nodes"],
+            sources=np.atleast_1d(np.asarray(sources, np.int32)),
+            engine="dense",
+        )
+        np.testing.assert_array_equal(res.dist, np.asarray(dist))
+        np.testing.assert_array_equal(res.pred, np.asarray(pred))
+        np.testing.assert_array_equal(
+            res.sources, np.atleast_1d(np.asarray(sources, np.int32))
+        )
+        assert res.labels is None and res.edge_u is None
+        return
     lab, _ = connected_components(
         g["src"], g["dst"], g["num_nodes"], engine=engine, mesh=mesh,
         dedup=False,

@@ -25,8 +25,8 @@ from repro.obs.metrics import derived_fragment
 from repro.serve import GraphRequest, GraphServeEngine
 
 
-def _serve(stream, max_requests: int) -> GraphServeEngine:
-    eng = GraphServeEngine(max_requests=max_requests)
+def _serve(stream, max_requests: int, **knobs) -> GraphServeEngine:
+    eng = GraphServeEngine(max_requests=max_requests, **knobs)
     for i, g in enumerate(stream):
         eng.submit(GraphRequest(uid=i, **g))
     eng.run()
@@ -36,7 +36,9 @@ def _serve(stream, max_requests: int) -> GraphServeEngine:
 def run(num_requests: int | None = None) -> list[str]:
     R = num_requests or max(8, int(1600 * SCALE))
     lines = []
-    for kind, family in (("cc", "random"), ("analytics", "tree")):
+    for kind, family in (
+        ("cc", "random"), ("analytics", "tree"), ("pagerank", "random"),
+    ):
         stream = graph_request_stream(R, kind=kind, family=family, seed=11)
         t_batch = time_fn(lambda: _serve(stream, 16), iters=2)
         eng = _serve(stream, 16)
@@ -67,6 +69,31 @@ def run(num_requests: int | None = None) -> list[str]:
             f"({t_solo / max(t_batch, 1e-12):.2f}x)",
             flush=True,
         )
+
+    # rank_engine="splitter" lane: served forests vary their tour-head
+    # count per wave, and the splitter count is a compiled dimension of
+    # the rank core -- tour_splitters' power-of-two capacity pad is
+    # what keeps the compile count bucket-bounded. Pinned here as the
+    # jit-cache DELTA of _random_splitter_core across the whole serve
+    # run (a raw size would count earlier suites' shapes).
+    from repro.core.list_ranking import _random_splitter_core
+
+    stream = graph_request_stream(
+        R, kind="analytics", family="tree", seed=13
+    )
+    cache0 = _random_splitter_core._cache_size()
+    t_spl = time_fn(
+        lambda: _serve(stream, 16, rank_engine="splitter"), iters=2
+    )
+    eng = _serve(stream, 16, rank_engine="splitter")
+    rank_compiles = _random_splitter_core._cache_size() - cache0
+    lines.append(emit(
+        f"graph_serve/batched/analytics-splitter/tree/req={R}",
+        t_spl / R * 1e6,
+        f"waves={eng.waves};compiles={eng.bucket_compiles};"
+        f"rank_compiles={rank_compiles}",
+        spread=(t_spl.p10 / R * 1e6, t_spl.p90 / R * 1e6),
+    ))
     return lines
 
 

@@ -1,0 +1,119 @@
+"""PageRank engines: frontier tolerance loop vs dense fixed schedule.
+
+The ADD-monoid proof suite for ``core/operators.py``: PageRank is one
+``advance`` + one ``compute`` + the shared ``run_rebuild_loop`` driver
+(``core/pagerank.py``), and this sweep pins its work accounting per
+graph family. Unlike the MIN-monoid engines an ADD frontier never
+compacts -- every contribution is part of the sum -- so both engines
+touch all ``m2`` oriented arcs every iteration (``edges_touched ==
+m2 * (iterations + 1)``, degree pass included) and the interesting
+counter is the ITERATION count: the frontier engine's host tolerance
+loop stops as soon as no node moves more than ``tol``, while the dense
+engine (the serve path's, one compile, zero per-iteration syncs) runs
+the analytic worst-case schedule ``pagerank_iter_bound()`` regardless.
+
+A parity record pins the bit-exactness contract as counters: the dense
+fixed schedule cut to the frontier's observed iteration count and the
+``serial_pagerank`` NumPy oracle must both match the frontier scores
+bit-for-bit (``dense_match=1;oracle_match=1``). All counters are
+deterministic and guarded by ``run.py --check``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit, time_fn
+from repro.core import pagerank, pagerank_iter_bound
+from repro.core.serial import serial_pagerank
+from repro.ops.kiss import giant_dust_graph, list_graph, random_graph
+
+
+def _star(n):
+    return np.stack(
+        [np.zeros(n - 1, np.int32), np.arange(1, n, dtype=np.int32)],
+        axis=1,
+    )
+
+
+def _families(n):
+    # the frontier engine host-syncs once per iteration and the
+    # iteration count is damping-bound (not diameter-bound), so no
+    # family needs the BF-style diameter cap -- but giant+dust and
+    # chain keep the sssp_frontier caps so the two sweeps stay
+    # comparable family for family
+    gd = min(n, 1000)
+    ch = min(n, 512)
+    return {
+        "giant+dust": (gd, giant_dust_graph(gd, 0.9, seed=1)),
+        "star": (n, _star(n)),
+        "random": (n, random_graph(n, 2.0 / max(n - 1, 1), seed=2)),
+        "chain": (ch, list_graph(ch, 1, seed=3)),
+    }
+
+
+def _weights(edges, salt=0):
+    r = np.random.default_rng(100 + salt)
+    return (r.integers(0, 8, size=len(edges)) / 4.0).astype(np.float32)
+
+
+def run(n: int | None = None) -> list[str]:
+    n = n or int(800_000 * SCALE)
+    bound = pagerank_iter_bound()
+    lines = []
+    for fam, (nf, edges) in _families(n).items():
+        src, dst = edges[:, 0], edges[:, 1]
+        w = _weights(edges)
+        t_front = time_fn(
+            lambda: pagerank(src, dst, w, nf, engine="frontier")[0],
+            iters=2,
+        )
+        _, _, fstats = pagerank(
+            src, dst, w, nf, engine="frontier", with_stats=True
+        )
+        lines.append(emit(
+            f"pagerank/frontier/{fam}/n={nf}",
+            t_front * 1e6,
+            f"iters={fstats.iterations};"
+            f"edges_touched={fstats.edges_touched};m2={fstats.m2};"
+            f"iter_bound={bound}",
+            spread=(t_front.p10 * 1e6, t_front.p90 * 1e6),
+        ))
+        t_dense = time_fn(
+            lambda: pagerank(src, dst, w, nf, engine="dense")[0], iters=2
+        )
+        _, _, dstats = pagerank(
+            src, dst, w, nf, engine="dense", with_stats=True
+        )
+        lines.append(emit(
+            f"pagerank/dense/{fam}/n={nf}",
+            t_dense * 1e6,
+            f"iters={dstats.iterations};"
+            f"edges_touched={dstats.edges_touched}",
+            spread=(t_dense.p10 * 1e6, t_dense.p90 * 1e6),
+        ))
+
+    # bit-exact parity pinned as counters (capped: the oracle's
+    # np.add.at walk is serial host work, not part of the sweep)
+    nf = min(n, 4096)
+    edges = random_graph(nf, 2.0 / max(nf - 1, 1), seed=2)
+    src, dst = edges[:, 0], edges[:, 1]
+    w = _weights(edges, salt=1)
+    sc_f, it_f = pagerank(src, dst, w, nf, engine="frontier")
+    k = int(it_f)
+    sc_d, _ = pagerank(src, dst, w, nf, engine="dense", num_iters=k)
+    sc_o = serial_pagerank(
+        np.stack([np.asarray(src), np.asarray(dst)], axis=1),
+        w, nf, num_iters=k,
+    )
+    lines.append(emit(
+        f"pagerank/parity/random/n={nf}",
+        0.0,
+        f"iters={k};"
+        f"dense_match={int(np.array_equal(np.asarray(sc_f), np.asarray(sc_d)))};"
+        f"oracle_match={int(np.array_equal(np.asarray(sc_f), sc_o))}",
+    ))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -155,6 +155,7 @@ def main(argv=None) -> None:
         graph_serve,
         moe_dispatch,
         multidev_scaling,
+        pagerank,
         roofline_table,
         serve_chaos,
         sssp_frontier,
@@ -171,6 +172,7 @@ def main(argv=None) -> None:
         ("fig4_cc", fig4_cc.run),
         ("cc_frontier", cc_frontier.run),
         ("sssp_frontier", sssp_frontier.run),
+        ("pagerank", pagerank.run),
         ("tree_ops", tree_ops.run),
         ("graph_serve", graph_serve.run),
         ("serve_chaos", serve_chaos.run),

@@ -139,6 +139,49 @@ def run(num_requests: int | None = None) -> list[str]:
         f"wave runs for containment",
         flush=True,
     )
+
+    # kind="pagerank" waves: the ADD-monoid family through the same
+    # containment machinery. The forced-nonconvergence injection here
+    # exercises the dense engine's REAL iteration-budget sentinel
+    # (max_rounds=0 + the post-run tolerance probe, core/pagerank.py),
+    # not a simulated failure -- so the quarantine counters pin that
+    # the sentinel fires and is contained like any other poison.
+    R3 = max(8, R // 2)
+    pstream = graph_request_stream(
+        R3, kind="pagerank", family="random", seed=43
+    )
+    t0 = time.perf_counter()  # repro-lint: disable=block-timer
+    pclean = _serve(pstream)
+    t_pclean = time.perf_counter() - t0  # repro-lint: disable=block-timer
+    h = pclean.health_records[-1]
+    lines.append(emit(
+        f"serve_chaos/pagerank_clean/req={R3}",
+        t_pclean / R3 * 1e6,
+        f"completed={h.completed};failed={h.failed};"
+        f"wave_runs={h.wave_runs};waves={pclean.waves}",
+    ))
+    pplan = FaultPlan.random(
+        44, range(R3), p_poison=0.2, p_transient=0.2, max_transient=2,
+        p_nonconverge=0.12,
+    )
+    t0 = time.perf_counter()  # repro-lint: disable=block-timer
+    peng = _serve(pstream, pplan)
+    t_pchaos = time.perf_counter() - t0  # repro-lint: disable=block-timer
+    h = peng.health_records[-1]
+    lines.append(emit(
+        f"serve_chaos/pagerank_faulty/req={R3}",
+        t_pchaos / R3 * 1e6,
+        f"completed={h.completed};failed={h.failed};"
+        f"retried={h.retried};quarantined={h.quarantined};"
+        f"degraded={h.degraded};bisections={h.bisections};"
+        f"wave_runs={h.wave_runs}",
+    ))
+    print(
+        f"# serve_chaos[pagerank]: {h.failed}/{R3} quarantined, "
+        f"{h.wave_runs - pclean.health_records[-1].wave_runs} extra "
+        f"wave runs for containment",
+        flush=True,
+    )
     return lines
 
 

@@ -25,6 +25,12 @@ from repro.core.sssp import (
     shortest_paths,
     sssp_round_bound,
 )
+from repro.core.pagerank import (
+    PAGERANK_ENGINES,
+    PageRankStats,
+    pagerank,
+    pagerank_iter_bound,
+)
 from repro.core.pram import (
     striding_indices,
     partitioning_indices,
@@ -381,6 +387,10 @@ __all__ = [
     "SsspStats",
     "SSSP_ENGINES",
     "sssp_round_bound",
+    "pagerank",
+    "pagerank_iter_bound",
+    "PageRankStats",
+    "PAGERANK_ENGINES",
     "label_propagation",
     "sv_round_bound",
     "ConvergenceError",

@@ -35,7 +35,6 @@ engine's.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -52,6 +51,12 @@ from repro.core.components import (
     sv_compress,
     sv_round_bound,
     sv_round_fns,
+)
+from repro.core.operators import (  # noqa: F401  (re-exported: the
+    bucket_size,  # filter primitives lived here before core/operators.py)
+    compact_frontier,
+    next_pow2,
+    run_bucket_ladder,
 )
 from repro.obs import trace
 
@@ -84,13 +89,6 @@ class FrontierStats:
         from repro.obs.metrics import publish_stats
 
         publish_stats(self, prefix, registry)
-
-
-def next_pow2(x: int) -> int:
-    """Smallest power of two >= x (1 for x <= 0): the bucket ladder every
-    frontier engine -- single-device and sharded -- sizes its compacted
-    edge buffers on, so compiled shapes stay static per level."""
-    return 1 << max(x - 1, 0).bit_length() if x > 0 else 1
 
 
 @partial(
@@ -134,24 +132,6 @@ def _run_level(a, b, D, Q, s, aux, *, n, bound, shrink_at, hook_impl,
         cond, wrapped, init
     )
     return D, Q, aux, s, changed, fmask, rounds
-
-
-@partial(jax.jit, static_argnames=("size",))
-def compact_frontier(a, b, fmask, *, size):
-    """Gather the masked frontier into a ``size``-slot buffer, padding
-    with inert (0, 0) self-loops. ``size`` must cover the mask count.
-
-    This is the **shard-local compaction primitive**: it only ever looks
-    at the edge buffer it is handed, so the sharded frontier engine
-    (``repro.distributed.graph.sharded_frontier_shiloach_vishkin``) runs
-    it unchanged inside ``shard_map`` -- each device compacts its own
-    edge shard into a bucket sized by the global (pmax'd) live count, so
-    every shard keeps one common compiled shape per level."""
-    m = a.shape[0]
-    idx = jnp.nonzero(fmask, size=size, fill_value=m)[0]
-    valid = idx < m
-    ic = jnp.minimum(idx, max(m - 1, 0))
-    return jnp.where(valid, a[ic], 0), jnp.where(valid, b[ic], 0)
 
 
 @partial(jax.jit, static_argnames=("n", "k"))
@@ -257,24 +237,25 @@ def frontier_shiloach_vishkin(
         stats.live_after_sample = live
         stats.edges_touched += m2  # full-list live scan (pre-pass rounds
         # walked only the sampled edges, so this mask needs its own pass)
-        size = min(m2, max(min_bucket, next_pow2(live)))
+        size = bucket_size(live, min_bucket=min_bucket, cap=m2)
         a, b = compact_frontier(a, b, live_mask, size=size)
         m2_level = size
         sample_sp.tag(live=live).__exit__(None, None, None)
     else:
         m2_level = m2
 
-    force_converge = False
+    fmask = None
     # Spans attach at the per-LEVEL syncs the shrink ladder already pays
     # (the int()/bool() reads below); tags reuse those reads, so tracing
-    # adds zero device round-trips (docs/observability.md).
+    # adds zero device round-trips (docs/observability.md). The ladder
+    # itself is operators.run_bucket_ladder -- the engine only supplies
+    # the level/compaction closures, so counters and sync sites are
+    # unchanged by construction.
     with trace.span("cc.frontier", n=n, m2=m2) as run_sp:
-        while True:
-            shrink_at = (
-                None if (m2_level <= min_bucket or force_converge)
-                else m2_level // 2
-            )
-            with trace.span("cc.frontier.level", bucket=m2_level) as sp:
+
+        def sv_level(bucket, shrink_at):
+            nonlocal D, Q, aux, s, fmask
+            with trace.span("cc.frontier.level", bucket=bucket) as sp:
                 D, Q, aux, s, changed, fmask, rounds = _run_level(
                     a, b, D, Q, s, aux,
                     n=n, bound=bound, shrink_at=shrink_at,
@@ -290,26 +271,29 @@ def frontier_shiloach_vishkin(
                 # live count per LEVEL to drive the shrink ladder -- the
                 # paper's level-synchronous design.
                 level_rounds = int(rounds)  # repro-lint: disable=host-sync
-                stats.edges_touched += passes * level_rounds * m2_level
-                stats.levels.append((m2_level, level_rounds))
+                stats.edges_touched += passes * level_rounds * bucket
+                stats.levels.append((bucket, level_rounds))
                 converged = not bool(changed)  # repro-lint: disable=host-sync
                 sp.tag(rounds=level_rounds, converged=converged)
-            if converged or int(s) > bound:  # repro-lint: disable=host-sync
-                break
-            # Shrink: the masked frontier fits the next power-of-two bucket.
-            live = int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
-            new_size = max(min_bucket, next_pow2(live))
-            if new_size >= m2_level:  # can't shrink: run to convergence
-                force_converge = True
-                continue
+            over = not converged and int(s) > bound  # repro-lint: disable=host-sync
+            return converged, over
+
+        def live_edges():
+            # Shrink: the masked frontier fits the next power-of-two
+            # bucket.
+            return int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
+
+        def charge_shrink(new_size):
             # The mask came out of this level's last SV3 pass; only the
             # gather-write of the surviving edges into the new buffer is
             # extra work.
             stats.edges_touched += new_size
-            a, b = compact_frontier(a, b, fmask, size=new_size)
-            m2_level = new_size
 
-        if not converged:
+        def shrink(new_size):
+            nonlocal a, b
+            a, b = compact_frontier(a, b, fmask, size=new_size)
+
+        def bound_hit():
             # The level loop ran out of round budget with hooks still
             # flowing: labels would be wrong, so fail loudly (the
             # convergence sentinel; see core.components.ConvergenceError).
@@ -318,6 +302,12 @@ def frontier_shiloach_vishkin(
                 f"{f', incl. {sample_rounds} sampling rounds' if sample_rounds else ''})"
                 f" before the label fixpoint on {n} nodes; raise max_rounds"
             )
+
+        run_bucket_ladder(
+            bucket=m2_level, min_bucket=min_bucket, run_level=sv_level,
+            live_count=live_edges, compact=shrink, on_shrink=charge_shrink,
+            on_nonconverged=bound_hit,
+        )
         D = sv_compress(D, n)
         # Terminal readback: the loop above already synced on s per level.
         rounds_total = int(s) - 1  # repro-lint: disable=host-sync

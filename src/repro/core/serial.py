@@ -151,6 +151,43 @@ def serial_bellman_ford(
     return dist, serial_sssp_parents(edges, weights, dist, source)
 
 
+def serial_pagerank(
+    edges: np.ndarray,
+    weights: np.ndarray | None,
+    n: int,
+    *,
+    damping: float = 0.85,
+    num_iters: int,
+    teleport: np.ndarray | None = None,
+) -> np.ndarray:
+    """NumPy mirror of ``repro.core.pagerank`` at a fixed iteration
+    count: the exact float32 op sequence -- separately-rounded
+    multiplies, teleport as the scatter BASE, ``np.add.at``
+    accumulation in edge-slot order (which matches the XLA scatter-add
+    on the CPU/TPU backends) -- so scores pin both device engines
+    bit-for-bit, iteration for iteration. ``weights=None`` means unit
+    weights; dangling mass leaks exactly like the engines'."""
+    u, v, w = _sssp_arcs(edges, weights)
+    dmp = np.float32(damping)
+    omd = np.float32(1.0) - dmp
+    t = (
+        np.full(n, 1.0 / n, np.float32)
+        if teleport is None
+        else np.asarray(teleport, np.float32).ravel()
+    )
+    deg = np.zeros(n, np.float32)
+    np.add.at(deg, u, w)
+    r = t.copy()
+    for _ in range(num_iters):
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = np.where(deg > 0, r / deg, np.float32(0.0)).astype(
+                np.float32
+            )
+        r = (omd * t).astype(np.float32)
+        np.add.at(r, v, (dmp * (out[u] * w)).astype(np.float32))
+    return r
+
+
 def canonicalize_labels(labels: np.ndarray) -> np.ndarray:
     """Map each component label to the min node id inside it (for equality
     testing across algorithms that pick different representatives)."""

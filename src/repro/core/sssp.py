@@ -60,7 +60,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.components import ConvergenceError, check_choice
-from repro.core.frontier import next_pow2
+from repro.core.operators import (
+    MIN,
+    advance,
+    bucket_size,
+    compact_weighted,
+    run_rebuild_loop,
+)
 from repro.obs import trace
 
 Array = jax.Array
@@ -174,7 +180,7 @@ def _bf_dense(a, b, w, dist0, *, bound):
 
     def body(carry):
         dist, s, _changed = carry
-        new = dist.at[:, b].min(dist[:, a] + w)
+        new = advance(dist, b, dist[:, a] + w, monoid=MIN)
         return new, s + 1, jnp.any(new < dist)
 
     dist, s, changed = jax.lax.while_loop(
@@ -194,7 +200,9 @@ def _min_parents(a, b, w, dist, srcs):
     S, n = dist.shape
     opt = (dist[:, a] + w == dist[:, b]) & (a != b)[None, :]
     cand = jnp.where(opt, a[None, :], n)
-    parent = jnp.full((S, n), n, jnp.int32).at[:, b].min(cand)
+    parent = advance(
+        jnp.full((S, n), n, jnp.int32), b, cand, monoid=MIN
+    )
     parent = jnp.where(parent < n, parent, UNREACHABLE)
     parent = jnp.where(jnp.isinf(dist), UNREACHABLE, parent)
     return parent.at[jnp.arange(S), srcs].set(srcs)
@@ -207,28 +215,18 @@ def _edge_frontier(a, changed_nodes):
     return changed_nodes[a]
 
 
-@partial(jax.jit, static_argnames=("size",))
-def _compact_weighted(a, b, w, fmask, *, size):
-    """``frontier.compact_frontier`` with a weight lane: gather the
-    masked frontier into a ``size``-slot buffer, padding with inert
-    (0, 0) zero-weight self-loops (a self-relax can never improve)."""
-    m = a.shape[0]
-    idx = jnp.nonzero(fmask, size=size, fill_value=m)[0]
-    valid = idx < m
-    ic = jnp.minimum(idx, max(m - 1, 0))
-    return (
-        jnp.where(valid, a[ic], 0),
-        jnp.where(valid, b[ic], 0),
-        jnp.where(valid, w[ic], 0.0),
-    )
+# The weighted compaction primitive moved to core/operators.py with the
+# rest of the filter machinery; the alias keeps the engine-local name.
+_compact_weighted = compact_weighted
 
 
 @jax.jit
 def _relax_level(ca, cb, cw, dist):
-    """One relax round over a compacted edge buffer. Returns the new
-    distance matrix and the (n,) any-row node-improved mask that seeds
-    the next level's frontier."""
-    new = dist.at[:, cb].min(dist[:, ca] + cw)
+    """One relax round over a compacted edge buffer (a MIN-monoid
+    advance of the per-edge candidates). Returns the new distance
+    matrix and the (n,) any-row node-improved mask that seeds the next
+    level's frontier."""
+    new = advance(dist, cb, dist[:, ca] + cw, monoid=MIN)
     return new, jnp.any(new < dist, axis=0)
 
 
@@ -328,38 +326,49 @@ def frontier_bellman_ford(
     stats = SsspStats(
         rounds=0, relax_visits=0, mask_visits=0, m2=m2, num_sources=S
     )
-    rounds = 0
+    fmask = None
     # Spans attach at the per-level syncs the bucket ladder already
     # pays (the int() live-count reads), so tracing adds zero extra
-    # device round-trips -- same policy as cc.frontier.
+    # device round-trips -- same policy as cc.frontier. The loop shape
+    # is operators.run_rebuild_loop: unlike CC's permanent compaction,
+    # every level re-masks the FULL edge list (a settled edge wakes up
+    # when its source's distance later drops -- module docstring).
     with trace.span("sssp.frontier", n=n, m2=m2, sources=S) as run_sp:
-        while True:
+
+        def live_edges():
+            nonlocal fmask
             if m2 == 0:
-                break
+                return 0
             fmask = _edge_frontier(a, changed_nodes)
             stats.mask_visits += m2
             # The level-synchronous sync: the host reads the live count
             # to pick the next power-of-two bucket.
-            live = int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
-            if live == 0:
-                break
-            if rounds >= bound:
-                # Frontier still live at the round bound: distances
-                # would be wrong, so fail loudly (the convergence
-                # sentinel; see core.components.ConvergenceError).
-                raise ConvergenceError(
-                    f"frontier_bellman_ford hit its round bound "
-                    f"({bound}) with {live} frontier edges still live "
-                    f"on {n} nodes; raise max_rounds (the safe bound "
-                    f"is sssp_round_bound(n)={sssp_round_bound(n)})"
-                )
-            size = min(m2, max(min_bucket, next_pow2(live)))
+            return int(jnp.sum(fmask.astype(jnp.int32)))  # repro-lint: disable=host-sync
+
+        def relax(live):
+            nonlocal dist, changed_nodes
+            size = bucket_size(live, min_bucket=min_bucket, cap=m2)
             with trace.span("sssp.level", bucket=size, live=live):
-                ca, cb, cw = _compact_weighted(a, b, w2, fmask, size=size)
+                ca, cb, cw = compact_weighted(a, b, w2, fmask, size=size)
                 dist, changed_nodes = _relax_level(ca, cb, cw, dist)
-            rounds += 1
             stats.relax_visits += size
             stats.levels.append((size, live))
+
+        def bound_hit(live, _rounds):
+            # Frontier still live at the round bound: distances would
+            # be wrong, so fail loudly (the convergence sentinel; see
+            # core.components.ConvergenceError).
+            raise ConvergenceError(
+                f"frontier_bellman_ford hit its round bound "
+                f"({bound}) with {live} frontier edges still live "
+                f"on {n} nodes; raise max_rounds (the safe bound "
+                f"is sssp_round_bound(n)={sssp_round_bound(n)})"
+            )
+
+        rounds = run_rebuild_loop(
+            bound=bound, live_count=live_edges, run_level=relax,
+            on_bound=bound_hit,
+        )
         run_sp.tag(rounds=rounds, levels=len(stats.levels))
     stats.rounds = rounds
     parent = _min_parents(a, b, w2, dist, jnp.asarray(srcs))

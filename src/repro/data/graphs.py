@@ -220,7 +220,10 @@ def graph_request_stream(
     ``kind="sssp"`` entries additionally carry ``"weights"`` (KISS
     eighths in ``{0, 0.25, ..., 1.75}`` -- zero weights included on
     purpose, they are an adversarial tie-break case) and ``"sources"``
-    (1-2 KISS-uniform nodes, duplicates allowed).
+    (1-2 KISS-uniform nodes, duplicates allowed). ``kind="pagerank"``
+    entries carry the same eighth-weights (zero weights exercise the
+    dangling/zero-degree branch) but no sources -- PageRank scores
+    every node.
     """
     if family not in ("random", "tree"):
         raise ValueError(f"unknown family {family!r}")
@@ -239,13 +242,16 @@ def graph_request_stream(
             src = ends[:, 0].astype(np.int32)
             dst = ends[:, 1].astype(np.int32)
         entry = {"src": src, "dst": dst, "num_nodes": n, "kind": kind}
-        if kind == "sssp":
+        if kind in ("sssp", "pagerank"):
             wrng = KissRng(seed * 6007 + i + 1, 1024)
             entry["weights"] = (
                 wrng.uniform_ints((len(src),), 8).astype(np.float32) / 4.0
             )
-            k = 1 + int(spans[i] % 2)
-            entry["sources"] = wrng.uniform_ints((k,), n).astype(np.int32)
+            if kind == "sssp":
+                k = 1 + int(spans[i] % 2)
+                entry["sources"] = wrng.uniform_ints((k,), n).astype(
+                    np.int32
+                )
         out.append(entry)
     return out
 

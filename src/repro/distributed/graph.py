@@ -72,7 +72,6 @@ from repro.core.components import (
     sv_round_fns,
     sv_run,
 )
-from repro.core.frontier import compact_frontier, next_pow2
 from repro.core.list_ranking import (
     KERNEL_IMPLS,
     SplitterStats,
@@ -81,6 +80,7 @@ from repro.core.list_ranking import (
     max_splitters_for_linear_work,
     select_splitters,
 )
+from repro.core.operators import compact_frontier, run_bucket_ladder
 from repro.core.pram import lockstep_walk
 from repro.obs import trace
 
@@ -617,25 +617,27 @@ def sharded_frontier_shiloach_vishkin(
         rounds=0, edges_touched=0, m2=m2, num_devices=nd, exchange=exchange,
     )
 
-    force_converge = False
+    fmask = None
+    live_max = None
     # Spans attach at the per-LEVEL syncs the shared shrink ladder
-    # already pays; tags reuse those reads (docs/observability.md).
+    # already pays; tags reuse those reads (docs/observability.md). The
+    # ladder is the same operators.run_bucket_ladder the single-device
+    # engine drives; only the closures differ -- the level runs inside
+    # shard_map and the live watermark is the pmax'd per-device count.
     with trace.span(
         "cc.sharded_frontier", n=n, m2=m2, devices=nd, exchange=exchange,
     ) as run_sp:
-        while True:
+
+        def sv_level(bucket_now, shrink_at):
+            nonlocal D, Q, aux, s, fmask, live_max
             capacity = (
-                frontier_sparse_capacity(n, bucket, sparse_capacity)
+                frontier_sparse_capacity(n, bucket_now, sparse_capacity)
                 if exchange == "sparse" else 0
             )
             if exchange == "sparse":
                 stats.capacities.append(capacity)
-            shrink_at = (
-                None if (bucket <= min_bucket or force_converge)
-                else bucket // 2
-            )
             with trace.span(
-                "cc.sharded_frontier.level", bucket=bucket,
+                "cc.sharded_frontier.level", bucket=bucket_now,
                 capacity=capacity,
             ) as sp:
                 D, Q, aux, s, changed, fmask, live_max, rounds = (
@@ -658,26 +660,29 @@ def sharded_frontier_shiloach_vishkin(
                 # the shared shrink ladder -- same level-synchronous
                 # design as frontier.py.
                 level_rounds = int(rounds)  # repro-lint: disable=host-sync
-                stats.edges_touched += passes * level_rounds * bucket
-                stats.levels.append((bucket, level_rounds))
+                stats.edges_touched += passes * level_rounds * bucket_now
+                stats.levels.append((bucket_now, level_rounds))
                 converged = not bool(changed)  # repro-lint: disable=host-sync
                 sp.tag(rounds=level_rounds, converged=converged)
-            if converged or int(s) > bound:  # repro-lint: disable=host-sync
-                break
+            over = not converged and int(s) > bound  # repro-lint: disable=host-sync
+            return converged, over
+
+        def live_edges():
             # Shrink: every shard drops to the power-of-two bucket
             # covering the LARGEST per-device live count (one shared
             # compiled shape).
-            new_bucket = max(min_bucket, next_pow2(int(live_max)))  # repro-lint: disable=host-sync
-            if new_bucket >= bucket:  # can't shrink: run to convergence
-                force_converge = True
-                continue
+            return int(live_max)  # repro-lint: disable=host-sync
+
+        def charge_shrink(new_bucket):
             stats.edges_touched += new_bucket
+
+        def shrink(new_bucket):
+            nonlocal a, b
             a, b = _sharded_compact(
                 a, b, fmask, size=new_bucket, mesh=mesh, axis=axis
             )
-            bucket = new_bucket
 
-        if not converged:
+        def bound_hit():
             raise ConvergenceError(
                 f"sharded frontier SV hit its round bound ({bound}) before"
                 f" the label fixpoint on {n} nodes across {nd} devices; the"
@@ -685,6 +690,12 @@ def sharded_frontier_shiloach_vishkin(
                 " max_rounds (the proven bound is sv_round_bound(n)="
                 f"{sv_round_bound(n)})"
             )
+
+        run_bucket_ladder(
+            bucket=bucket, min_bucket=min_bucket, run_level=sv_level,
+            live_count=live_edges, compact=shrink, on_shrink=charge_shrink,
+            on_nonconverged=bound_hit,
+        )
         D = sv_compress(D, n)
         # Terminal readback: the loop above already synced on s per level.
         rounds_total = int(s) - 1  # repro-lint: disable=host-sync

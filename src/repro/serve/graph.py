@@ -65,17 +65,19 @@ from repro.serve.waves import WaveScheduler
 # Request kinds. The first three form a pipeline-stage chain -- each
 # stage subsumes the ones before it, so a mixed wave runs the deepest
 # stage any member needs (record_hooks and the tour stages are
-# label-neutral by construction). "sssp" is OUTSIDE the chain: a
-# shortest-path wave runs a different device program (relax-min over
-# weighted edges), so ``_next_wave`` packs sssp requests only with
-# other sssp requests -- stage promotion never mixes the families.
-KINDS = ("cc", "forest", "analytics", "sssp")
-_STAGE = {k: i for i, k in enumerate(KINDS) if k != "sssp"}
+# label-neutral by construction). "sssp" and "pagerank" are OUTSIDE
+# the chain: each runs a different device program (relax-min over
+# weighted edges; add-monoid mass push), so ``_next_wave`` packs them
+# only with their own kind -- stage promotion never mixes families.
+KINDS = ("cc", "forest", "analytics", "sssp", "pagerank")
+_STAGE = {
+    k: i for i, k in enumerate(KINDS) if k not in ("sssp", "pagerank")
+}
 
 
 def _family(kind: str) -> str:
     """Wave-packing family: kinds that can share one device program."""
-    return "sssp" if kind == "sssp" else "cc-chain"
+    return kind if kind in ("sssp", "pagerank") else "cc-chain"
 
 
 @dataclass
@@ -87,7 +89,9 @@ class GraphResult:
     solo edge order) from kind ``"forest"`` up; the tree-analytics
     arrays only for ``"analytics"``. Kind ``"sssp"`` instead fills
     ``dist``/``pred``/``sources``: one row per source, ``+inf`` /
-    ``-1`` for unreachable nodes.
+    ``-1`` for unreachable nodes. Kind ``"pagerank"`` fills only
+    ``scores``: per-node float32 PageRank mass at the engine's fixed
+    iteration count (``pagerank_iters``).
     """
 
     labels: np.ndarray | None = None
@@ -102,6 +106,7 @@ class GraphResult:
     dist: np.ndarray | None = None  # (num_sources, n) float32
     pred: np.ndarray | None = None  # (num_sources, n) int32 parent tree
     sources: np.ndarray | None = None  # the request's source nodes
+    scores: np.ndarray | None = None  # (n,) float32 pagerank mass
 
 
 @dataclass
@@ -111,8 +116,9 @@ class GraphRequest:
     dst: np.ndarray
     num_nodes: int
     kind: str = "analytics"
-    # sssp-only inputs: per-edge weights (None = unit / BFS) and the
-    # source nodes (None = [0]); rejected on non-sssp requests.
+    # weighted-kind inputs: per-edge weights (None = unit) for sssp /
+    # pagerank and the sssp source nodes (None = [0]); rejected on
+    # kinds that cannot consume them.
     weights: np.ndarray | None = None
     sources: np.ndarray | None = None
     result: GraphResult | None = None
@@ -168,6 +174,14 @@ class GraphServeEngine(WaveScheduler):
       ``_run_sssp_wave``). sssp waves map ``engine="auto"`` to
       ``"dense"`` like CC waves and reject ``mesh=`` /
       ``engine="sharded_frontier"`` at submit.
+    * ``damping`` (0.85) / ``pagerank_iters`` (None =
+      ``pagerank_iter_bound(damping, DEFAULT_TOL)``) -- the
+      engine-wide ``kind="pagerank"`` knobs. PageRank serving always
+      runs the DENSE fixed-iteration engine at exactly
+      ``pagerank_iters`` iterations: a tolerance-driven stop would
+      run every wave to its slowest member's iteration count, making
+      a request's scores depend on its wave-mates. Fixed iterations
+      keep batched == solo bit-exact (see ``_run_pagerank_wave``).
     * ``engine=`` / ``rank_engine=`` / ``kernel_impl=`` /
       ``num_splitters=`` / ``mesh=`` and any extra engine kwargs
       (``hook_impl=``, ``exchange=``, ``min_bucket=``, ...) dispatch
@@ -193,6 +207,8 @@ class GraphServeEngine(WaveScheduler):
         min_nodes: int = 64,
         min_edges: int = 128,
         max_sources: int = 8,
+        damping: float = 0.85,
+        pagerank_iters: int | None = None,
         engine: str = "auto",
         rank_engine: str = "auto",
         kernel_impl: str = "auto",
@@ -205,6 +221,7 @@ class GraphServeEngine(WaveScheduler):
     ):
         import repro.core as core
         from repro.core.list_ranking import KERNEL_IMPLS
+        from repro.core.pagerank import DEFAULT_TOL, pagerank_iter_bound
         from repro.trees.compute import RANK_ENGINES
 
         check_choice("engine", engine, core._CC_ENGINES)
@@ -229,6 +246,17 @@ class GraphServeEngine(WaveScheduler):
         self.min_nodes = min_nodes
         self.min_edges = min_edges
         self.max_sources = max_sources  # per-request sssp source budget
+        # PageRank serve knobs are engine-wide (wave-uniform): every
+        # request in a pagerank wave runs the same damping at the same
+        # fixed iteration count, so the resolved count is pinned HERE.
+        # pagerank_iter_bound also validates damping in (0, 1).
+        self.damping = float(damping)
+        default_iters = pagerank_iter_bound(self.damping, DEFAULT_TOL)
+        self.pagerank_iters = (
+            default_iters if pagerank_iters is None else int(pagerank_iters)
+        )
+        if self.pagerank_iters < 1:
+            raise ValueError("pagerank_iters must be >= 1")
         # Degradation caps (permanent, only ever lowered): the packing
         # budget after OOM-shaped failures; see _degrade.
         self._node_budget = max_nodes
@@ -301,9 +329,12 @@ class GraphServeEngine(WaveScheduler):
             )
         if req.kind == "sssp":
             self._validate_sssp(req)
+        elif req.kind == "pagerank":
+            self._validate_pagerank(req)
         elif req.weights is not None or req.sources is not None:
             raise ValueError(
-                f"request {req.uid}: weights/sources are sssp-only fields"
+                f"request {req.uid}: weights/sources are only consumed "
+                "by the sssp/pagerank kinds"
             )
         super().submit(req)
 
@@ -348,6 +379,41 @@ class GraphServeEngine(WaveScheduler):
                 f"request {req.uid}: sources outside [0, {req.num_nodes})"
             )
         req.sources = s
+
+    def _validate_pagerank(self, req: GraphRequest) -> None:
+        """Normalize + validate the pagerank-only request fields."""
+        if self.mesh is not None or self.engine == "sharded_frontier":
+            raise ValueError(
+                f"request {req.uid}: pagerank waves run the single-"
+                "device dense engine; drop mesh= / "
+                "engine='sharded_frontier'"
+            )
+        if self.engine_kwargs:
+            raise ValueError(
+                f"request {req.uid}: {sorted(self.engine_kwargs)} are "
+                "not pagerank engine knobs (the dense fixed-iteration "
+                "engine takes only damping= / pagerank_iters=)"
+            )
+        if req.sources is not None:
+            raise ValueError(
+                f"request {req.uid}: sources is an sssp-only field "
+                "(pagerank scores every node)"
+            )
+        if req.weights is None:
+            w = np.ones(req.num_edges, np.float32)  # unit weights
+        else:
+            w = np.asarray(req.weights, np.float32).ravel()
+        if w.shape != req.src.shape:
+            raise ValueError(
+                f"request {req.uid}: weights length {w.shape} != edge "
+                f"count {req.src.shape}"
+            )
+        if req.num_edges and (not np.isfinite(w).all() or bool((w < 0).any())):
+            raise ValueError(
+                f"request {req.uid}: pagerank weights must be finite "
+                "and >= 0"
+            )
+        req.weights = w
 
     def _next_wave(self) -> list[GraphRequest]:
         """FIFO greedy packing under the node/edge budget (the
@@ -428,6 +494,8 @@ class GraphServeEngine(WaveScheduler):
 
         if wave[0].kind == "sssp":  # family-pure by _next_wave
             return self._run_sssp_wave(wave)
+        if wave[0].kind == "pagerank":
+            return self._run_pagerank_wave(wave)
 
         stage = KINDS[max(_STAGE[r.kind] for r in wave)]
         node_off = np.cumsum([0] + [r.num_nodes for r in wave])
@@ -605,6 +673,92 @@ class GraphServeEngine(WaveScheduler):
             num_nodes=n_union, num_edges=m_union,
             node_cap=node_cap, edge_cap=edge_cap,
             new_bucket=new_bucket, rounds=int(rounds), src_cap=src_cap,
+        )
+        self.wave_records.append(rec)
+        rec.publish(self.metrics)
+
+    def _run_pagerank_wave(self, wave: list[GraphRequest]):
+        """The pagerank-family wave: one dense fixed-iteration
+        ``pagerank`` call over the disjoint union. Each request keeps
+        its SOLO teleport vector in its node slice (``1/n_i`` uniform
+        mass -- the same float64-literal rounding the solo default
+        uses), pad nodes get teleport 0, and pad edges are
+        weight-0.0 self-loops: they push zero mass and add zero
+        degree, and ``x + 0.0f == x`` bitwise for the non-negative
+        scores/degrees PageRank produces. Mass never crosses an
+        offset boundary in a disjoint union and the packed edge-slot
+        order restricted to one request is its solo order (forward
+        arcs then backward arcs, pads between them contributing
+        +0.0), so the deterministic scatter-add accumulates each
+        node's mass in exactly its solo sequence: every unpacked
+        ``scores`` slice is bit-identical to the solo dense run at
+        ``pagerank_iters`` iterations (asserted in
+        ``tests/test_serve_graph.py``). ``fault_plan.check_wave``
+        already ran in ``_run_wave``."""
+        from repro.core.pagerank import pagerank
+
+        stage = "pagerank"
+        node_off = np.cumsum([0] + [r.num_nodes for r in wave])
+        n_union = int(node_off[-1])
+        m_union = sum(r.num_edges for r in wave)
+        node_cap = max(self.min_nodes, next_pow2(n_union))
+        edge_cap = max(self.min_edges, next_pow2(max(m_union, 1)))
+        if self.fault_plan is not None:
+            self.fault_plan.check_bucket(node_cap)
+        with trace.span(
+            "serve.wave.pack", requests=len(wave), stage=stage,
+            node_cap=node_cap, edge_cap=edge_cap,
+        ):
+            src = np.zeros((edge_cap,), np.int32)  # pad: self-loops...
+            dst = np.zeros((edge_cap,), np.int32)
+            wts = np.zeros((edge_cap,), np.float32)  # ...of weight 0
+            tel = np.zeros((node_cap,), np.float32)
+            eo = 0
+            for r, o in zip(wave, node_off):
+                src[eo:eo + r.num_edges] = r.src + o
+                dst[eo:eo + r.num_edges] = r.dst + o
+                wts[eo:eo + r.num_edges] = r.weights
+                eo += r.num_edges
+                tel[o:o + r.num_nodes] = np.full(
+                    r.num_nodes, 1.0 / r.num_nodes, np.float32
+                )
+
+        bucket = (stage, node_cap, edge_cap)
+        new_bucket = bucket not in self._buckets
+
+        kw = {}
+        if self.fault_plan is not None and self.fault_plan.wants_nonconverge(
+            wave
+        ):
+            # Cap the iteration budget below the fixed count so the
+            # dense engine's REAL ConvergenceError sentinel fires.
+            kw["max_rounds"] = 0
+        with trace.span(
+            "serve.wave.engine", stage=stage, requests=len(wave),
+            node_cap=node_cap, edge_cap=edge_cap, new_bucket=new_bucket,
+            engine="dense",
+        ) as esp:
+            scores, iters = pagerank(
+                src, dst, wts, node_cap,
+                damping=self.damping, teleport=tel,
+                num_iters=self.pagerank_iters, engine="dense", **kw,
+            )
+            scores = np.asarray(scores)
+            esp.tag(rounds=int(iters))
+
+        with trace.span("serve.wave.unpack", requests=len(wave)):
+            for r, o in zip(wave, node_off):
+                r.result = GraphResult(
+                    scores=scores[o:o + r.num_nodes].copy()
+                )
+                r.done = True
+
+        self._buckets.add(bucket)
+        rec = WaveRecord(
+            requests=len(wave), stage=stage,
+            num_nodes=n_union, num_edges=m_union,
+            node_cap=node_cap, edge_cap=edge_cap,
+            new_bucket=new_bucket, rounds=int(iters),
         )
         self.wave_records.append(rec)
         rec.publish(self.metrics)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.components import check_choice
+from repro.core.operators import next_pow2
 from repro.core.list_ranking import (
     KERNEL_IMPLS,
     WYLIE_PACK_MODES,
@@ -56,7 +57,18 @@ def tour_splitters(
     random extras. Heads MUST be splitters -- a sub-list walk only
     covers arcs downstream of some splitter, and a list head has no
     upstream -- which is the one extra rule the forest case adds over
-    ``select_splitters``'s single-list convention."""
+    ``select_splitters``'s single-list convention.
+
+    The returned set is capacity-padded to the next power of two (with
+    distinct, deterministically-chosen extra arc ids): the splitter
+    COUNT is a compiled dimension of ``_random_splitter_core``, and
+    the head count of a served forest varies per wave -- without the
+    pad every distinct tour-head count costs one recompile per bucket
+    (pinned by ``benchmarks/graph_serve.py``'s splitter lane). Extra
+    splitters only refine the sub-list decomposition; ranks are exact
+    integers either way. The pad ids must be DISTINCT from the
+    existing set: a duplicate splitter would hand one arc two lane
+    ids, making the lane scatter order-dependent."""
     L = tour.capacity
     if tour.num_arcs:
         # mask, don't slice: padded-edge-buffer tours interleave dead
@@ -72,7 +84,12 @@ def tour_splitters(
     p = min(max(p, 1), L)
     head0 = int(heads[0]) if len(heads) else 0
     extras = select_splitters(L, p, seed=seed, head=head0)
-    return np.unique(np.concatenate([heads, extras.astype(np.int64)]))
+    spl = np.unique(np.concatenate([heads, extras.astype(np.int64)]))
+    target = min(L, next_pow2(len(spl)))
+    if target > len(spl):
+        pool = np.setdiff1d(np.arange(L, dtype=np.int64), spl)
+        spl = np.sort(np.concatenate([spl, pool[: target - len(spl)]]))
+    return spl
 
 
 def tour_ranks(

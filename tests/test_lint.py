@@ -238,7 +238,7 @@ def test_choice_set_registry_matches_live_docs():
     )
     code = choice_set.code_choices(_ROOT)
     assert choice_set.compare(doc, code) == []
-    assert len(code) == 12
+    assert len(code) == 13
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,443 @@
+"""The advance/filter/compute operator layer (`repro.core.operators`):
+unit contracts for the monoid scatters, the filter primitives, and the
+two host drivers -- plus hypothesis equivalence properties pinning the
+operator-composed engines (frontier CC / frontier SSSP / PageRank) to
+their dense counterparts and serial oracles bit-for-bit, across the
+adversarial families (empty frontier, duplicate edges, self-loops,
+single-node graphs)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
+
+from repro.core import ConvergenceError
+from repro.core.operators import (
+    ADD,
+    MIN,
+    advance,
+    bucket_size,
+    compact_frontier,
+    compact_weighted,
+    compute,
+    next_pow2,
+    run_bucket_ladder,
+    run_rebuild_loop,
+)
+
+
+# ---------------------------------------------------------------------------
+# filter primitives
+# ---------------------------------------------------------------------------
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (-3, 0, 1, 2, 3, 4, 5, 1023, 1024)] == [
+        1, 1, 1, 2, 4, 4, 8, 1024, 1024,
+    ]
+
+
+def test_bucket_size_floor_and_cap():
+    assert bucket_size(3, min_bucket=16) == 16
+    assert bucket_size(100, min_bucket=16) == 128
+    assert bucket_size(100, min_bucket=16, cap=64) == 64
+    assert bucket_size(0, min_bucket=8) == 8
+
+
+def test_compact_frontier_gathers_in_slot_order_and_pads_inert():
+    a = np.array([5, 6, 7, 8, 9], np.int32)
+    b = np.array([1, 2, 3, 4, 5], np.int32)
+    mask = np.array([True, False, True, True, False])
+    ca, cb = compact_frontier(a, b, mask, size=8)
+    np.testing.assert_array_equal(np.asarray(ca)[:3], [5, 7, 8])
+    np.testing.assert_array_equal(np.asarray(cb)[:3], [1, 3, 4])
+    np.testing.assert_array_equal(np.asarray(ca)[3:], 0)  # inert pads
+    np.testing.assert_array_equal(np.asarray(cb)[3:], 0)
+
+
+def test_compact_weighted_pads_zero_weight():
+    a = np.array([1, 2, 3], np.int32)
+    b = np.array([4, 5, 6], np.int32)
+    w = np.array([0.5, 1.5, 2.5], np.float32)
+    ca, cb, cw = compact_weighted(
+        a, b, w, np.array([False, True, False]), size=4
+    )
+    np.testing.assert_array_equal(np.asarray(ca), [2, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(cb), [5, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(cw), [1.5, 0.0, 0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# advance: the monoid scatter contracts
+# ---------------------------------------------------------------------------
+
+
+def test_advance_min_matches_numpy_and_is_idempotent():
+    r = np.random.default_rng(0)
+    n, m = 13, 40
+    tgt = r.random(n).astype(np.float32)
+    idx = r.integers(0, n, m).astype(np.int32)
+    val = r.random(m).astype(np.float32)
+    ref = tgt.copy()
+    np.minimum.at(ref, idx, val)
+    out = np.asarray(advance(jnp.asarray(tgt), idx, val, monoid=MIN))
+    np.testing.assert_array_equal(out, ref)
+    # idempotent: scattering twice changes nothing
+    np.testing.assert_array_equal(
+        np.asarray(advance(jnp.asarray(out), idx, val, monoid=MIN)), ref
+    )
+    # identity pads are inert
+    np.testing.assert_array_equal(
+        np.asarray(advance(
+            jnp.asarray(tgt), idx, np.full(m, MIN.identity, np.float32),
+            monoid=MIN,
+        )),
+        tgt,
+    )
+
+
+def test_advance_min_batched_rows():
+    """The ``...`` scatter form covers (S, n) batched rows (SSSP's
+    multi-source distance array) identically per row."""
+    r = np.random.default_rng(1)
+    S, n, m = 3, 9, 20
+    tgt = r.random((S, n)).astype(np.float32)
+    idx = r.integers(0, n, m).astype(np.int32)
+    val = r.random((S, m)).astype(np.float32)
+    out = np.asarray(advance(jnp.asarray(tgt), idx, val, monoid=MIN))
+    for s in range(S):
+        ref = tgt[s].copy()
+        np.minimum.at(ref, idx, val[s])
+        np.testing.assert_array_equal(out[s], ref)
+
+
+def test_advance_add_matches_numpy_bitwise():
+    """The ADD determinism contract: scatter-add folds collisions in
+    edge-slot order on this backend, exactly ``np.add.at`` -- the
+    property the PageRank serial oracle is built on."""
+    r = np.random.default_rng(2)
+    n, m = 11, 64
+    tgt = r.random(n).astype(np.float32)
+    idx = r.integers(0, n, m).astype(np.int32)
+    val = r.random(m).astype(np.float32)
+    ref = tgt.copy()
+    np.add.at(ref, idx, val)
+    np.testing.assert_array_equal(
+        np.asarray(advance(jnp.asarray(tgt), idx, val, monoid=ADD)), ref
+    )
+    # identity pads are inert (the weight-0 pad-edge rule)
+    np.testing.assert_array_equal(
+        np.asarray(advance(
+            jnp.asarray(tgt), idx, np.full(m, ADD.identity, np.float32),
+            monoid=ADD,
+        )),
+        tgt,
+    )
+
+
+def test_compute_is_elementwise_map():
+    x = np.arange(5, dtype=np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(compute(lambda a, b: a + b, x, x)), 2 * x
+    )
+
+
+# ---------------------------------------------------------------------------
+# host drivers
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_shrinks_monotonically_then_converges():
+    """Scripted live counts: the ladder shrinks to next_pow2(live),
+    never re-expands, passes the half-bucket watermark while a shrink
+    is possible, and runs to convergence once it can't shrink."""
+    lives = iter([100, 20, 20])
+    calls, shrinks = [], []
+
+    def run_level(bucket, shrink_at):
+        calls.append((bucket, shrink_at))
+        return (len(calls) >= 4, False)  # converge on the 4th level
+
+    run_bucket_ladder(
+        bucket=256, min_bucket=16,
+        run_level=run_level,
+        live_count=lambda: next(lives),
+        compact=lambda new: shrinks.append(new),
+        on_shrink=lambda new: shrinks.append(-new),
+    )
+    # 256 -> 128 -> 32, then live=20 gives next_pow2=32 == bucket: the
+    # ladder stops shrinking and runs the last level to convergence.
+    assert calls == [(256, 128), (128, 64), (32, 16), (32, None)]
+    assert shrinks == [-128, 128, -32, 32]  # on_shrink before compact
+
+
+def test_bucket_ladder_min_bucket_never_shrinks():
+    calls = []
+
+    def run_level(bucket, shrink_at):
+        calls.append((bucket, shrink_at))
+        return (True, False)
+
+    run_bucket_ladder(
+        bucket=16, min_bucket=16,
+        run_level=run_level,
+        live_count=lambda: pytest.fail("no sync needed at min_bucket"),
+        compact=lambda new: pytest.fail("nothing to compact"),
+    )
+    assert calls == [(16, None)]
+
+
+def test_bucket_ladder_nonconvergence_sentinel():
+    with pytest.raises(ConvergenceError, match="before convergence"):
+        run_bucket_ladder(
+            bucket=16, min_bucket=16,
+            run_level=lambda bucket, shrink_at: (False, True),  # bound hit
+            live_count=lambda: 1,
+            compact=lambda new: None,
+        )
+
+    class EngineBound(ConvergenceError):
+        pass
+
+    def raise_mine():
+        raise EngineBound("engine text")
+
+    with pytest.raises(EngineBound, match="engine text"):
+        run_bucket_ladder(
+            bucket=16, min_bucket=16,
+            run_level=lambda bucket, shrink_at: (False, True),
+            live_count=lambda: 1,
+            compact=lambda new: None,
+            on_nonconverged=raise_mine,
+        )
+
+
+def test_rebuild_loop_runs_until_dry_and_counts():
+    lives = iter([3, 2, 1, 0])
+    seen = []
+    rounds = run_rebuild_loop(
+        bound=10, live_count=lambda: next(lives),
+        run_level=lambda live: seen.append(live),
+    )
+    assert rounds == 3 and seen == [3, 2, 1]
+    assert run_rebuild_loop(
+        bound=0, live_count=lambda: 0,
+        run_level=lambda live: pytest.fail("dry loop must not run"),
+    ) == 0
+
+
+def test_rebuild_loop_bound_sentinel():
+    with pytest.raises(ConvergenceError, match="round bound"):
+        run_rebuild_loop(
+            bound=2, live_count=lambda: 5, run_level=lambda live: None,
+        )
+
+    def raise_mine(live, rounds):
+        assert (live, rounds) == (5, 2)
+        raise ConvergenceError("engine bound text")
+
+    with pytest.raises(ConvergenceError, match="engine bound text"):
+        run_rebuild_loop(
+            bound=2, live_count=lambda: 5, run_level=lambda live: None,
+            on_bound=raise_mine,
+        )
+
+
+# ---------------------------------------------------------------------------
+# equivalence properties: operator-composed engines vs dense + oracles
+# ---------------------------------------------------------------------------
+
+
+def _random_graph(seed, max_n=12, max_m_factor=3):
+    """Adversarial family: duplicate edges, self-loops, empty edge
+    lists, and single-node graphs all occur."""
+    r = np.random.default_rng(seed)
+    n = int(r.integers(1, max_n + 1))
+    m = int(r.integers(0, max_m_factor * n))
+    src = r.integers(0, n, m).astype(np.int32)
+    dst = r.integers(0, n, m).astype(np.int32)
+    return src, dst, n, r
+
+
+def _check_cc_equivalence(seed):
+    """The operator-composed frontier CC == dense SV: labels, rounds,
+    and the recorded hook forest, bit-for-bit."""
+    from repro.core import frontier_shiloach_vishkin, shiloach_vishkin
+    from repro.core.serial import canonicalize_labels, serial_connected_components
+
+    src, dst, n, _ = _random_graph(seed)
+    lab_d, rounds_d, (hu_d, hv_d) = shiloach_vishkin(
+        src, dst, n, record_hooks=True
+    )
+    lab_f, rounds_f, (hu_f, hv_f) = frontier_shiloach_vishkin(
+        src, dst, n, min_bucket=4, record_hooks=True
+    )
+    np.testing.assert_array_equal(np.asarray(lab_f), np.asarray(lab_d))
+    assert int(rounds_f) == int(rounds_d)
+    np.testing.assert_array_equal(np.asarray(hu_f), np.asarray(hu_d))
+    np.testing.assert_array_equal(np.asarray(hv_f), np.asarray(hv_d))
+    # and both partition like the union-find oracle
+    np.testing.assert_array_equal(
+        canonicalize_labels(np.asarray(lab_d)),
+        serial_connected_components(
+            np.stack([src, dst], axis=1).astype(np.int64), n
+        ),
+    )
+
+
+def _check_sssp_equivalence(seed):
+    """The operator-composed frontier Bellman-Ford == dense BF ==
+    both serial oracles, bit-for-bit in dist and parents."""
+    from repro.core import bellman_ford, frontier_bellman_ford
+    from repro.core.serial import serial_bellman_ford, serial_dijkstra
+
+    src, dst, n, r = _random_graph(seed)
+    w = (r.integers(0, 8, len(src)) / 4.0).astype(np.float32)
+    source = int(r.integers(0, n))
+    dist_d, par_d, _ = bellman_ford(src, dst, w, n, sources=[source])
+    dist_f, par_f, _ = frontier_bellman_ford(
+        src, dst, w, n, sources=[source], min_bucket=4
+    )
+    np.testing.assert_array_equal(np.asarray(dist_f), np.asarray(dist_d))
+    np.testing.assert_array_equal(np.asarray(par_f), np.asarray(par_d))
+    edges = np.stack([src, dst], axis=1).astype(np.int64)
+    for oracle in (serial_bellman_ford, serial_dijkstra):
+        dist_s, par_s = oracle(edges, w, n, source)
+        np.testing.assert_array_equal(np.asarray(dist_d)[0], dist_s)
+        np.testing.assert_array_equal(np.asarray(par_d)[0], par_s)
+
+
+def _check_pagerank_equivalence(seed):
+    """The two PageRank engines and the NumPy oracle agree bit-for-bit
+    at the same iteration count: the host tolerance loop's trajectory
+    IS the fixed dense schedule's prefix IS the serial op sequence."""
+    from repro.core.pagerank import pagerank
+    from repro.core.serial import serial_pagerank
+
+    src, dst, n, r = _random_graph(seed)
+    w = (r.integers(0, 8, len(src)) / 4.0).astype(np.float32)
+    scores_f, iters = pagerank(src, dst, w, n, engine="frontier")
+    k = int(iters)
+    scores_d, iters_d = pagerank(src, dst, w, n, engine="dense", num_iters=k)
+    assert int(iters_d) == k
+    np.testing.assert_array_equal(
+        np.asarray(scores_d), np.asarray(scores_f)
+    )
+    oracle = serial_pagerank(
+        np.stack([src, dst], axis=1).astype(np.int64), w, n, num_iters=k
+    )
+    np.testing.assert_array_equal(np.asarray(scores_f), oracle)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_frontier_cc_matches_dense_bit_exact(seed):
+    _check_cc_equivalence(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_frontier_sssp_matches_dense_and_oracles_bit_exact(seed):
+    _check_sssp_equivalence(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pagerank_engines_match_oracle_bit_exact(seed):
+    _check_pagerank_equivalence(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_equivalence_deterministic_seeds(seed):
+    """Three pinned seeds per engine family (run even without
+    hypothesis) so the operator-composition equivalences are always
+    exercised in CI."""
+    _check_cc_equivalence(seed)
+    _check_sssp_equivalence(seed)
+    _check_pagerank_equivalence(seed)
+
+
+def test_pagerank_deterministic_edge_cases():
+    """Single-node, empty-edge, duplicate-edge, and all-zero-weight
+    graphs: engines still agree with the oracle bit-for-bit (runs even
+    without hypothesis)."""
+    from repro.core.pagerank import pagerank
+    from repro.core.serial import serial_pagerank
+
+    cases = [
+        (np.zeros(0, np.int32), np.zeros(0, np.int32), None, 1),
+        (np.zeros(0, np.int32), np.zeros(0, np.int32), None, 5),
+        (np.array([0, 0, 0], np.int32), np.array([1, 1, 1], np.int32),
+         None, 3),  # duplicate edges fold in slot order
+        (np.array([0, 1], np.int32), np.array([1, 2], np.int32),
+         np.array([0.0, 0.0], np.float32), 3),  # dangling by zero weight
+        (np.array([0, 1, 2, 0], np.int32), np.array([1, 2, 0, 0], np.int32),
+         np.array([0.5, 1.5, 0.25, 1.0], np.float32), 4),  # self-loop
+    ]
+    for src, dst, w, n in cases:
+        scores_f, iters = pagerank(src, dst, w, n, engine="frontier")
+        k = int(iters)
+        scores_d, _ = pagerank(src, dst, w, n, engine="dense", num_iters=k)
+        oracle = serial_pagerank(
+            np.stack([src, dst], axis=1).astype(np.int64), w, n,
+            num_iters=k,
+        )
+        np.testing.assert_array_equal(np.asarray(scores_f), oracle)
+        np.testing.assert_array_equal(np.asarray(scores_d), oracle)
+
+
+def test_pagerank_validation_and_sentinels():
+    from repro.core.pagerank import pagerank, pagerank_iter_bound
+
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 2], np.int32)
+    with pytest.raises(TypeError, match="num_nodes"):
+        pagerank(src, dst)
+    with pytest.raises(ValueError, match="pagerank_engine"):
+        pagerank(src, dst, None, 3, engine="fastest")
+    with pytest.raises(ValueError, match="finite"):
+        pagerank(src, dst, np.array([1.0, np.inf], np.float32), 3)
+    with pytest.raises(ValueError, match=">= 0"):
+        pagerank(src, dst, np.array([1.0, -1.0], np.float32), 3)
+    with pytest.raises(ValueError, match="teleport"):
+        pagerank(src, dst, None, 3, teleport=np.ones(2, np.float32))
+    with pytest.raises(ValueError, match="damping"):
+        pagerank_iter_bound(damping=1.0)
+    with pytest.raises(ValueError, match="num_iters"):
+        pagerank(src, dst, None, 3, engine="frontier", num_iters=5)
+    # the convergence sentinels: both engines raise the REAL error
+    with pytest.raises(ConvergenceError, match="iteration bound"):
+        pagerank(src, dst, None, 3, engine="frontier", max_rounds=1)
+    with pytest.raises(ConvergenceError, match="iteration budget"):
+        pagerank(src, dst, None, 3, engine="dense", max_rounds=0)
+    # stats: every iteration walks all 2m arcs, plus the degree pass
+    scores, iters, stats = pagerank(src, dst, None, 3, with_stats=True)
+    assert stats.m2 == 4 and stats.iterations == int(iters)
+    assert stats.edges_touched == 4 * (int(iters) + 1)
+    assert len(stats.levels) == int(iters)
+
+
+def test_pagerank_auto_traces_to_dense():
+    """engine="auto" under jit runs the traceable dense engine; the
+    frontier engine rejects tracing loudly."""
+    import jax
+
+    from repro.core.pagerank import pagerank
+
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 2], np.int32)
+
+    @jax.jit
+    def traced(s, d):
+        return pagerank(s, d, None, 3, num_iters=7)
+
+    scores = np.asarray(traced(src, dst)[0])
+    solo, _ = pagerank(src, dst, None, 3, engine="dense", num_iters=7)
+    np.testing.assert_array_equal(scores, np.asarray(solo))
+
+    @jax.jit
+    def traced_frontier(s, d):
+        return pagerank(s, d, None, 3, engine="frontier")
+
+    with pytest.raises(ValueError, match="host-driven"):
+        traced_frontier(src, dst)

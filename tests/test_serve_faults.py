@@ -433,8 +433,9 @@ def _chaos_round(num_requests, seed, width, kinds=("analytics",)):
             "num_nodes": n,
             "kind": kinds[int(r.integers(0, len(kinds)))],
         }
-        if g["kind"] == "sssp":
+        if g["kind"] in ("sssp", "pagerank"):
             g["weights"] = (r.integers(0, 8, m) / 4.0).astype(np.float32)
+        if g["kind"] == "sssp":
             g["sources"] = r.integers(
                 0, n, int(r.integers(1, 3))
             ).astype(np.int32)
@@ -579,3 +580,107 @@ def test_chaos_deterministic_seeds_sssp(seed):
     """Deterministic mixed-kind chaos rounds (run even without
     hypothesis), so the sssp containment paths are CI chaos-smoke."""
     _chaos_round(6, seed, 3, kinds=("analytics", "sssp"))
+
+
+# ---------------------------------------------------------------------------
+# kind="pagerank" fault containment
+# ---------------------------------------------------------------------------
+
+
+def test_pagerank_poison_bisected_within_log_bound():
+    """One poison in a K-request pagerank wave: same acceptance bound
+    as the other families, survivors' scores bit-exact vs solo."""
+    k, poison = 8, 5
+    stream = _stream(k, seed=51, kind="pagerank")
+    eng = GraphServeEngine(
+        max_requests=k, fault_plan=FaultPlan(poison_uids=frozenset([poison])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == k
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[poison].failed and "InjectedEngineError" in (
+        by_uid[poison].error
+    )
+    for uid in set(range(k)) - {poison}:
+        assert not by_uid[uid].failed
+        _assert_matches_solo(by_uid[uid], stream[uid])
+    h = eng.health_records[-1]
+    assert h.wave_runs - 1 <= math.ceil(math.log2(k)) + 1
+    assert h.quarantined == 1 and h.completed == k - 1
+    assert all(w.stage == "pagerank" for w in eng.wave_records)
+
+
+def test_pagerank_transient_fault_retried_in_place():
+    stream = _stream(4, seed=53, kind="pagerank")
+    eng = GraphServeEngine(
+        max_requests=4, max_retries=1,
+        fault_plan=FaultPlan(transient_uids={1: 1}),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert all(not r.failed for r in done)
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid])
+    h = eng.health_records[-1]
+    assert h.retried == 1 and h.quarantined == 0 and h.wave_runs == 2
+
+
+def test_pagerank_nonconvergence_fires_iteration_budget_sentinel():
+    """wants_nonconverge caps the dense engine's iteration budget to 0
+    so the REAL post-run tolerance probe in core.pagerank raises (not
+    a fake error): the wave quarantines with ConvergenceError, other
+    pagerank waves stay bit-exact."""
+    stream = _stream(6, seed=55, kind="pagerank")
+    eng = GraphServeEngine(
+        max_requests=2,
+        fault_plan=FaultPlan(nonconverge_uids=frozenset([2])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    by_uid = {r.uid: r for r in done}
+    assert len(done) == 6
+    assert by_uid[2].failed and "ConvergenceError" in by_uid[2].error
+    assert "max_rounds" in by_uid[2].error  # the core sentinel's text
+    for uid in set(range(6)) - {2}:
+        assert not by_uid[uid].failed
+        _assert_matches_solo(by_uid[uid], stream[uid])
+
+
+def test_pagerank_oom_degrades_bucket_and_completes_everything():
+    stream = _stream(8, seed=57, kind="pagerank")
+    probe = GraphServeEngine(max_requests=8)
+    node_cap, _ = probe._wave_caps(_requests(stream))
+    eng = GraphServeEngine(
+        max_requests=8,
+        fault_plan=FaultPlan(oom_node_caps=frozenset([node_cap])),
+    )
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 8 and all(not r.failed for r in done)
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid])
+    assert eng.health_records[-1].degraded >= 1
+    assert all(w.node_cap < node_cap for w in eng.wave_records)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 7), st.integers(0, 10_000), st.integers(1, 4))
+def test_chaos_property_all_three_families(num_requests, seed, width):
+    """The chaos property over all three packing families interleaved:
+    faults + family-boundary wave closes never break exactly-once or
+    bit-exactness."""
+    _chaos_round(
+        num_requests, seed, width, kinds=("analytics", "sssp", "pagerank")
+    )
+
+
+@pytest.mark.parametrize("seed", [13, 404])
+def test_chaos_deterministic_seeds_pagerank(seed):
+    """Deterministic three-family chaos rounds (run even without
+    hypothesis): CI chaos-smoke for the pagerank containment paths."""
+    _chaos_round(6, seed, 3, kinds=("analytics", "sssp", "pagerank"))

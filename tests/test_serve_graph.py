@@ -24,10 +24,28 @@ def _requests(stream):
     return [GraphRequest(uid=i, **g) for i, g in enumerate(stream)]
 
 
-def _assert_matches_solo(req, g, *, engine="dense", mesh=None):
+def _assert_matches_solo(req, g, *, engine="dense", mesh=None,
+                         pagerank_iters=None):
     """Batched result == the same engine run on the request alone."""
     res = req.result
     assert req.done and res is not None
+    if g["kind"] == "pagerank":
+        # the serve path always runs the dense fixed-iteration engine;
+        # its default count is pagerank_iter_bound at default knobs.
+        from repro.core.pagerank import pagerank, pagerank_iter_bound
+
+        iters = (
+            pagerank_iters if pagerank_iters is not None
+            else pagerank_iter_bound()
+        )
+        scores, _ = pagerank(
+            g["src"], g["dst"], g.get("weights"), g["num_nodes"],
+            engine="dense", num_iters=iters,
+        )
+        np.testing.assert_array_equal(res.scores, np.asarray(scores))
+        assert res.labels is None and res.dist is None
+        assert res.edge_u is None and res.parent is None
+        return
     if g["kind"] == "sssp":
         # sssp engines are bit-exact across engines, so "dense" pins
         # the solo baseline regardless of what the wave ran.
@@ -200,6 +218,132 @@ def test_submit_validation():
         GraphServeEngine(sample_rounds=2)
     with pytest.raises(ValueError, match="engine"):
         GraphServeEngine(engine="fastest")
+
+
+def test_pagerank_batched_bit_exact_vs_solo_and_oracle():
+    """kind="pagerank" waves: every unpacked scores slice equals the
+    solo dense run AND the serial NumPy oracle bit-for-bit."""
+    from repro.core.serial import serial_pagerank
+
+    stream = graph_request_stream(6, kind="pagerank", seed=31)
+    eng = GraphServeEngine(max_requests=3)
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 6 and eng.waves == 2
+    assert all(w.stage == "pagerank" for w in eng.wave_records)
+    assert all(w.rounds == eng.pagerank_iters for w in eng.wave_records)
+    for r in done:
+        g = stream[r.uid]
+        _assert_matches_solo(r, g, pagerank_iters=eng.pagerank_iters)
+        oracle = serial_pagerank(
+            np.stack([g["src"], g["dst"]], axis=1), g["weights"],
+            g["num_nodes"], num_iters=eng.pagerank_iters,
+        )
+        np.testing.assert_array_equal(r.result.scores, oracle)
+
+
+def test_three_way_family_boundary_fifo_stable():
+    """The _family packing boundary over all three families: a wave
+    closes AT the boundary in FIFO order (no reordering past it --
+    later same-family requests are NOT pulled forward), each wave is
+    family-pure, and stage promotion never crosses a family."""
+    stream = (
+        graph_request_stream(1, kind="cc", seed=61)
+        + graph_request_stream(1, kind="analytics", family="tree", seed=62)
+        + graph_request_stream(2, kind="sssp", seed=63)
+        + graph_request_stream(2, kind="pagerank", seed=64)
+        + graph_request_stream(1, kind="cc", seed=65)
+        + graph_request_stream(1, kind="pagerank", seed=66)
+    )
+    eng = GraphServeEngine(max_requests=16)
+    for r in _requests(stream):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == len(stream)
+    # cc+analytics promote WITHIN the cc-chain family; every family
+    # switch closes the wave, and the trailing cc / pagerank requests
+    # are served in arrival order, not merged backwards.
+    assert [w.stage for w in eng.wave_records] == [
+        "analytics", "sssp", "pagerank", "cc", "pagerank"
+    ]
+    assert [w.requests for w in eng.wave_records] == [2, 2, 2, 1, 1]
+    # completion order is FIFO (family boundaries never reorder)
+    assert [r.uid for r in done] == list(range(len(stream)))
+    for r in done:
+        _assert_matches_solo(r, stream[r.uid],
+                             pagerank_iters=eng.pagerank_iters)
+    # no cross-family field leaks: the cc member of the promoted wave
+    # got labels only; sssp rows got no scores; pagerank no labels.
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].result.scores is None
+    assert by_uid[0].result.dist is None
+    assert by_uid[2].result.scores is None
+    assert by_uid[4].result.labels is None
+
+
+def test_pagerank_submit_validation():
+    z = np.zeros(0, np.int32)
+    eng = GraphServeEngine()
+    with pytest.raises(ValueError, match="sssp-only"):
+        eng.submit(GraphRequest(
+            uid=0, src=z, dst=z, num_nodes=3, kind="pagerank",
+            sources=np.zeros(1, np.int32),
+        ))
+    with pytest.raises(ValueError, match="finite"):
+        eng.submit(GraphRequest(
+            uid=1, src=np.array([0], np.int32), dst=np.array([1], np.int32),
+            num_nodes=3, kind="pagerank",
+            weights=np.array([-1.0], np.float32),
+        ))
+    with pytest.raises(ValueError, match="only consumed"):
+        eng.submit(GraphRequest(
+            uid=2, src=z, dst=z, num_nodes=3, kind="cc",
+            weights=np.zeros(0, np.float32),
+        ))
+    assert eng.queue == []
+    with pytest.raises(ValueError, match="pagerank_iters"):
+        GraphServeEngine(pagerank_iters=0)
+    with pytest.raises(ValueError, match="damping"):
+        GraphServeEngine(damping=1.5)
+    # engine knobs that cannot reach the dense pagerank engine reject
+    # at submit, like the sssp path does
+    knobbed = GraphServeEngine(engine="frontier", min_bucket=32)
+    with pytest.raises(ValueError, match="not pagerank engine knobs"):
+        knobbed.submit(GraphRequest(
+            uid=3, src=z, dst=z, num_nodes=3, kind="pagerank",
+        ))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 10_000), st.integers(1, 4))
+def test_mixed_family_streams_bit_exact_property(num_requests, seed, width):
+    """Hypothesis over ALL THREE packing families interleaved: the
+    family-boundary wave closes keep every request bit-exact vs its
+    solo engine, including empty-edge and single-node requests."""
+    r = np.random.default_rng(seed)
+    kinds = ("cc", "analytics", "sssp", "pagerank")
+    stream = []
+    for _ in range(num_requests):
+        n = int(r.integers(1, 14))
+        m = int(r.integers(0, 4 * n))
+        g = {
+            "src": r.integers(0, n, m).astype(np.int32),
+            "dst": r.integers(0, n, m).astype(np.int32),
+            "num_nodes": n,
+            "kind": kinds[int(r.integers(0, len(kinds)))],
+        }
+        if g["kind"] in ("sssp", "pagerank"):
+            g["weights"] = (r.integers(0, 8, m) / 4.0).astype(np.float32)
+        if g["kind"] == "sssp":
+            g["sources"] = r.integers(
+                0, n, int(r.integers(1, 3))
+            ).astype(np.int32)
+        stream.append(g)
+    done = serve_graphs(_requests(stream), max_requests=width)
+    assert sorted(req.uid for req in done) == list(range(num_requests))
+    for req in done:
+        _assert_matches_solo(req, stream[req.uid])
 
 
 @settings(max_examples=12, deadline=None)

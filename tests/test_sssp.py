@@ -316,7 +316,7 @@ def test_serve_sssp_submit_validation():
         eng.submit(req(3, sources=np.array([3])))
     with pytest.raises(ValueError, match="max_sources"):
         eng.submit(req(4, sources=np.array([0, 1, 2])))
-    with pytest.raises(ValueError, match="sssp-only"):
+    with pytest.raises(ValueError, match="sssp/pagerank kinds"):
         eng.submit(GraphRequest(
             uid=5, src=e[0], dst=e[1], num_nodes=3, kind="cc",
             weights=np.array([1.0, 1.0]),

@@ -38,6 +38,7 @@ KNOBS = {
     "pack_mode": ("src/repro/core/list_ranking.py", "PACK_MODES"),
     "kind": ("src/repro/serve/graph.py", "KINDS"),
     "sssp_engine": ("src/repro/core/sssp.py", "SSSP_ENGINES"),
+    "pagerank_engine": ("src/repro/core/pagerank.py", "PAGERANK_ENGINES"),
     "on_overflow": ("src/repro/serve/engine.py", "OVERFLOW_POLICIES"),
     "on_failure": ("src/repro/serve/waves.py", "FAILURE_POLICIES"),
     "trace": ("src/repro/obs/trace.py", "TRACE_MODES"),

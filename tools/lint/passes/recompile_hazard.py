@@ -6,8 +6,9 @@ argument derived from a **data-dependent host int** -- ``int()`` /
 -- recompiles on every distinct value. The repo's discipline (the
 frontier engines' shrink ladder, the serve engines' capacity buckets)
 is to quantize such ints onto a static ladder first: ``next_pow2``,
-``pad_to`` / ``_pad_to``, ``tour_capacity``,
-``frontier_sparse_capacity``, ``default_sparse_capacity``.
+``bucket_size`` (``core/operators.py``), ``pad_to`` / ``_pad_to``,
+``tour_capacity``, ``frontier_sparse_capacity``,
+``default_sparse_capacity``.
 
 This pass taints names assigned from host-materialized device scalars
 and flags tainted expressions reaching a compile-shape sink:
@@ -30,6 +31,7 @@ from tools.lint.core import LintPass, Module, Project
 SANITIZERS = frozenset(
     {
         "next_pow2",
+        "bucket_size",
         "pad_to",
         "_pad_to",
         "tour_capacity",
